@@ -1,0 +1,73 @@
+"""Shared benchmark fixtures: datasets, engines, query workloads.
+
+Scale: ``REPRO_BENCH_SCALE`` env var — "small" (default; CPU-container
+friendly) or an integer corpus size.  The paper-scale sizes (Table 1) remain
+available via scale="full" at real-hardware budgets.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import EngineConfig, FilteredANNEngine, recall_at_k
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+
+DATASETS = ("sift", "glove200", "wolt", "arxiv")
+K = 10
+
+_cache: Dict[str, tuple] = {}
+
+
+def bench_scale() -> str:
+    return os.environ.get("REPRO_BENCH_SCALE", "small")
+
+
+def corpus_n() -> int:
+    s = bench_scale()
+    if s == "small":
+        return 30_000
+    if s == "reduced":
+        return 100_000
+    return int(s)
+
+
+def get_fixture(name: str, with_acorn: bool = False):
+    """(dataset, engine, acorn_index|None, timings dict) — cached per run."""
+    key = f"{name}_{with_acorn}"
+    if key in _cache:
+        return _cache[key]
+    ds = make_dataset(name, scale=str(corpus_n()), seed=0)
+    t0 = time.perf_counter()
+    eng = FilteredANNEngine(ds.vectors, ds.cat, ds.num, EngineConfig(seed=0)).build()
+    t_build = time.perf_counter() - t0
+
+    tq, tp, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 60, kinds=ds.filter_kinds, seed=1
+    )
+    t0 = time.perf_counter()
+    eng.fit(tq, tp, k=K)
+    t_fit = time.perf_counter() - t0
+
+    acorn = None
+    t_acorn = 0.0
+    if with_acorn:
+        from repro.index import AcornIndex
+
+        t0 = time.perf_counter()
+        acorn = AcornIndex(ds.vectors, m=24, seed=0).build()
+        t_acorn = time.perf_counter() - t0
+
+    out = (ds, eng, acorn, {"build": t_build, "fit": t_fit, "acorn": t_acorn})
+    _cache[key] = out
+    return out
+
+
+def eval_queries(ds, n=40, sel_range=(0.01, 0.2), seed=7):
+    return gen_queries(
+        ds.vectors, ds.cat, ds.num, n, kinds=ds.filter_kinds,
+        sel_range=sel_range, seed=seed,
+    )

@@ -1,0 +1,79 @@
+"""Paper Figure 2: latency-recall trade-offs across datasets under varying
+selectivity.
+
+For each dataset and each average-selectivity bucket, runs the four methods
+(pre-filtering reported separately, as in the paper) over a query batch and
+reports mean recall@10 + mean end-to-end seconds per query.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import recall_at_k
+from repro.core.executors import AcornExec
+
+from .common import DATASETS, K, eval_queries, get_fixture
+
+SEL_BUCKETS = [(0.01, 0.02), (0.04, 0.06), (0.09, 0.12), (0.18, 0.22)]
+
+
+def _run_method(fn, qs, preds, eng):
+    recs, times = [], []
+    for i, p in enumerate(preds):
+        t0 = time.perf_counter()
+        res = fn(qs[i], p)
+        dt = time.perf_counter() - t0
+        truth = eng.ground_truth(qs[i], p, K)
+        recs.append(recall_at_k(res, truth))
+        times.append(dt)
+    return float(np.mean(recs)), float(np.mean(times))
+
+
+def run(n_queries=25):
+    rows = []
+    for name in DATASETS:
+        ds, eng, acorn, _ = get_fixture(name, with_acorn=True)
+        acorn_exec = AcornExec(acorn, ds.cat, ds.num, ef=64)
+        for lo, hi in SEL_BUCKETS:
+            qs, preds, sels = eval_queries(ds, n=n_queries, sel_range=(lo, hi), seed=11)
+            mid = float(np.mean(sels))
+
+            r_post, t_post = _run_method(
+                lambda q, p: eng.post_exec.search(q[None], p, K).ids, qs, preds, eng
+            )
+            r_pre, t_pre = _run_method(
+                lambda q, p: eng.pre_exec.search(q[None], p, K).ids, qs, preds, eng
+            )
+            r_ac, t_ac = _run_method(
+                lambda q, p: acorn_exec.search(q[None], p, K).ids, qs, preds, eng
+            )
+            r_lp, t_lp = _run_method(
+                lambda q, p: eng.query(q, p, K).result.ids, qs, preds, eng
+            )
+            rows.append({
+                "dataset": name, "avg_selectivity": round(mid, 4),
+                "post_recall": round(r_post, 3), "post_s": round(t_post, 5),
+                "pre_recall": round(r_pre, 3), "pre_s": round(t_pre, 5),
+                "acorn_recall": round(r_ac, 3), "acorn_s": round(t_ac, 5),
+                "planner_recall": round(r_lp, 3), "planner_s": round(t_lp, 5),
+            })
+            print(
+                f"  {name} sel~{mid:.3f}: post {r_post:.2f}/{t_post*1e3:.1f}ms "
+                f"pre {r_pre:.2f}/{t_pre*1e3:.1f}ms acorn {r_ac:.2f}/{t_ac*1e3:.1f}ms "
+                f"PLANNER {r_lp:.2f}/{t_lp*1e3:.1f}ms"
+            )
+    return rows
+
+
+def main():
+    rows = run()
+    print("dataset,avg_sel,method,recall,seconds")
+    for r in rows:
+        for m in ("post", "pre", "acorn", "planner"):
+            print(f"{r['dataset']},{r['avg_selectivity']},{m},{r[m+'_recall']},{r[m+'_s']}")
+
+
+if __name__ == "__main__":
+    main()

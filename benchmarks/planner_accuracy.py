@@ -1,0 +1,61 @@
+"""Core-planner decision quality (paper §3.3: ROC-AUC objective).
+
+Labels fresh evaluation queries with the oracle strategy (run both, compare
+utility U = recall/time) and reports the planner's agreement, ROC-AUC, and
+the utility regret of planner vs oracle vs fixed strategies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import recall_at_k
+from repro.core.planner import roc_auc, PRE_FILTER, POST_FILTER
+
+from .common import DATASETS, K, eval_queries, get_fixture
+
+
+def run(n_queries=30):
+    rows = []
+    for name in DATASETS:
+        ds, eng, _, _ = get_fixture(name)
+        qs, preds, sels = eval_queries(ds, n=n_queries, sel_range=(0.005, 0.3), seed=31)
+        y_true, scores, u_planner, u_oracle, u_pre, u_post = [], [], [], [], [], []
+        for i, p in enumerate(preds):
+            truth = eng.ground_truth(qs[i], p, K)
+            r_pre = eng.pre_exec.search(qs[i][None], p, K)
+            r_post = eng.post_exec.search(qs[i][None], p, K)
+            up = recall_at_k(r_pre.ids, truth) / max(r_pre.elapsed, 1e-7)
+            uq = recall_at_k(r_post.ids, truth) / max(r_post.elapsed, 1e-7)
+            oracle = PRE_FILTER if up >= uq else POST_FILTER
+            res = eng.query(qs[i], p, K)
+            u_sel = recall_at_k(res.result.ids, truth) / max(res.result.elapsed, 1e-7)
+            y_true.append(oracle)
+            est = eng.estimator.estimate(p)
+            scores.append(float(eng.planner.predict_proba(
+                eng.feat.vector(p, est, K))[0]))
+            u_planner.append(u_sel)
+            u_oracle.append(max(up, uq))
+            u_pre.append(up)
+            u_post.append(uq)
+        y_true = np.asarray(y_true)
+        decisions = (np.asarray(scores) >= 0.5).astype(int)
+        rows.append({
+            "dataset": name,
+            "auc": round(roc_auc(y_true, np.asarray(scores)), 3),
+            "accuracy": round(float((decisions == y_true).mean()), 3),
+            "utility_vs_oracle": round(float(np.mean(u_planner) / np.mean(u_oracle)), 3),
+            "utility_vs_pre": round(float(np.mean(u_planner) / max(np.mean(u_pre), 1e-9)), 2),
+            "utility_vs_post": round(float(np.mean(u_planner) / max(np.mean(u_post), 1e-9)), 2),
+        })
+    return rows
+
+
+def main():
+    print("dataset,auc,accuracy,utility_vs_oracle,utility_vs_pre,utility_vs_post")
+    for r in run():
+        print(f"{r['dataset']},{r['auc']},{r['accuracy']},{r['utility_vs_oracle']},"
+              f"{r['utility_vs_pre']},{r['utility_vs_post']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Table 1: dataset statistics (stand-in generators at bench scale)."""
+from __future__ import annotations
+
+from repro.data import DATASETS as PAPER_SIZES
+
+from .common import DATASETS, corpus_n, get_fixture
+
+
+def run():
+    rows = []
+    for name in DATASETS:
+        ds, _, _, _ = get_fixture(name)
+        paper_n, paper_d, kinds = PAPER_SIZES[name]
+        rows.append({
+            "dataset": name,
+            "bench_size": ds.n,
+            "paper_size": paper_n,
+            "dim": ds.dim,
+            "filter_kinds": "+".join(ds.filter_kinds),
+            "cat_attrs": ds.cat.shape[1],
+            "num_attrs": ds.num.shape[1],
+        })
+    return rows
+
+
+def main():
+    print("dataset,bench_size,paper_size,dim,filters,cat_attrs,num_attrs")
+    for r in run():
+        print(f"{r['dataset']},{r['bench_size']},{r['paper_size']},{r['dim']},"
+              f"{r['filter_kinds']},{r['cat_attrs']},{r['num_attrs']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 2: construction time — ACORN-1 vs Learned Planner.
+
+Learned-planner construction = dataset statistics + global IVF index +
+training-data prep + model fits (exactly what the paper counts); ACORN-1 =
+graph build.  Reports the speedup column like the paper.
+"""
+from __future__ import annotations
+
+from .common import DATASETS, get_fixture
+
+
+def run():
+    rows = []
+    for name in DATASETS:
+        ds, eng, acorn, t = get_fixture(name, with_acorn=True)
+        ours = t["build"] + t["fit"]
+        rows.append({
+            "dataset": name,
+            "acorn_s": round(t["acorn"], 2),
+            "learned_planner_s": round(ours, 2),
+            "speedup": round(t["acorn"] / max(ours, 1e-9), 2),
+        })
+    return rows
+
+
+def main():
+    print("dataset,acorn_s,learned_planner_s,speedup")
+    for r in run():
+        print(f"{r['dataset']},{r['acorn_s']},{r['learned_planner_s']},{r['speedup']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Train a ~100M-param LM for a few hundred steps (deliverable b's training
+driver, CPU-sized).  Uses the same launch/train.py machinery as the
+production mesh, with checkpoint/resume enabled.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="hymba-1.5b")
+    args = ap.parse_args()
+    train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--seq-len", "64", "--batch", "8",
+        "--ckpt-dir", "/tmp/repro_train_ckpt", "--ckpt-every", "50",
+        "--lr", "1e-3",
+    ])

@@ -1,0 +1,134 @@
+"""Checkpointing: sharded, atomic, async, resumable.
+
+Layout:  <dir>/step_<N>/
+            manifest.json        — step, leaf paths/shapes/dtypes, status
+            <leaf-path>.npy      — one array per leaf (gathered)
+
+* atomicity: written to ``step_<N>.tmp`` then os.rename'd — a crash leaves
+  either the old or the new checkpoint, never a torn one;
+* async: ``save_async`` snapshots to host memory on the caller's thread
+  (device->host copy), then writes on a background thread so the train loop
+  keeps stepping;
+* retention: ``keep`` most-recent checkpoints;
+* resume: ``latest_step`` + ``restore`` (optionally onto a *different* mesh —
+  elastic restarts re-place the gathered arrays with the new sharding; see
+  dist/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = True):
+        host = [(k, np.asarray(v)) for k, v in _flatten(tree)]
+        if blocking:
+            self._write(step, host)
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=self._write, args=(step, host))
+            self._thread.start()
+
+    def save_async(self, step: int, tree: Any):
+        self.save(step, tree, blocking=False)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+        for key, arr in host:
+            fn = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][key] = {
+                "file": fn,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(
+        self,
+        step: int,
+        target_tree: Any,
+        shardings: Any = None,
+    ) -> Any:
+        """Restore into the structure of ``target_tree``.  If ``shardings``
+        (a matching tree of NamedSharding) is given, arrays are placed with
+        those shardings — this is the elastic-resume path (the saved mesh
+        need not equal the restoring mesh)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        keys = [k for k, _ in _flatten(target_tree)]
+        missing = [k for k in keys if k not in manifest["leaves"]]
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {missing[:5]}")
+        arrays = {
+            k: np.load(os.path.join(d, manifest["leaves"][k]["file"])) for k in keys
+        }
+        shard_flat = _flatten(shardings) if shardings is not None else None
+        leaves = []
+        for i, k in enumerate(keys):
+            a = arrays[k]
+            if shard_flat is not None:
+                leaves.append(jax.device_put(a, shard_flat[i][1]))
+            else:
+                leaves.append(jax.numpy.asarray(a))
+        treedef = jax.tree_util.tree_structure(target_tree)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,40 @@
+"""Config registry: ``get_config("<arch-id>")`` resolves --arch flags."""
+from .base import ModelConfig, SHAPES, ShapeSpec
+
+from .gemma2_2b import CONFIG as _gemma2_2b
+from .qwen3_14b import CONFIG as _qwen3_14b
+from .qwen3_32b import CONFIG as _qwen3_32b
+from .deepseek_67b import CONFIG as _deepseek_67b
+from .internvl2_76b import CONFIG as _internvl2_76b
+from .seamless_m4t_large_v2 import CONFIG as _seamless
+from .xlstm_1_3b import CONFIG as _xlstm
+from .olmoe_1b_7b import CONFIG as _olmoe
+from .llama4_scout_17b_a16e import CONFIG as _llama4
+from .hymba_1_5b import CONFIG as _hymba
+
+REGISTRY = {
+    c.name: c
+    for c in [
+        _gemma2_2b,
+        _qwen3_14b,
+        _qwen3_32b,
+        _deepseek_67b,
+        _internvl2_76b,
+        _seamless,
+        _xlstm,
+        _olmoe,
+        _llama4,
+        _hymba,
+    ]
+}
+
+ARCH_IDS = sorted(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    return REGISTRY[name]
+
+
+__all__ = ["ModelConfig", "SHAPES", "ShapeSpec", "REGISTRY", "ARCH_IDS", "get_config"]

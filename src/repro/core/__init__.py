@@ -1,0 +1,18 @@
+from .predicates import LabelEq, Predicate, RangePred
+from .stats import DatasetStats
+from .selectivity import SelectivityEstimator
+from .planner import CorePlanner, PlannerFeatures, PRE_FILTER, POST_FILTER
+from .executors import PreFilterExec, PostFilterExec, AcornExec, SearchResult, recall_at_k
+from .engine import FilteredANNEngine, EngineConfig, PlannedResult
+from .trainer import gen_queries, gen_predicate
+from .gbm import GradientBoostingRegressor
+
+__all__ = [
+    "LabelEq", "Predicate", "RangePred",
+    "DatasetStats", "SelectivityEstimator",
+    "CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER",
+    "PreFilterExec", "PostFilterExec", "AcornExec", "SearchResult", "recall_at_k",
+    "FilteredANNEngine", "EngineConfig", "PlannedResult",
+    "gen_queries", "gen_predicate",
+    "GradientBoostingRegressor",
+]

@@ -1,0 +1,171 @@
+"""FilteredANNEngine — the public API tying the paper's pieces together.
+
+Workflow (paper Fig. 1): query -> selectivity estimator -> core planner ->
+selected executor -> results.  The engine owns the dataset statistics, the
+global IVF index (post-filter backend), the estimator, the planner, and the
+executors; ``fit()`` runs the paper's §3.1 training-data preparation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..index.flat import l2_topk
+from ..index.ivf import IVFIndex
+from .executors import PostFilterExec, PreFilterExec, SearchResult, recall_at_k
+from .planner import CorePlanner, PlannerFeatures, POST_FILTER, PRE_FILTER
+from .predicates import Predicate
+from .selectivity import SelectivityEstimator
+from .stats import DatasetStats
+
+__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_lists: Optional[int] = None      # IVF lists (default sqrt(N))
+    sample_frac: float = 0.02          # stats sample (paper: 1-5 %)
+    alpha0: int = 4                    # initial post-filter expansion
+    nprobe0: int = 8
+    seed: int = 0
+    default_k: int = 10                # warmed-up k for the jit'd searches
+
+
+@dataclasses.dataclass
+class PlannedResult:
+    result: SearchResult
+    est_selectivity: float
+    decision: int                      # PRE_FILTER / POST_FILTER
+    plan_overhead: float               # seconds spent estimating + deciding
+
+
+class FilteredANNEngine:
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        cat: np.ndarray,
+        num: np.ndarray,
+        config: EngineConfig = EngineConfig(),
+    ):
+        self.vectors = np.ascontiguousarray(vectors, np.float32)
+        self.cat, self.num = cat, num
+        self.config = config
+        self.build_time_: dict = {}
+
+    # ------------------------------------------------------------------
+    def build(self) -> "FilteredANNEngine":
+        """Offline phase: statistics + global index (paper Table 2 costs)."""
+        t0 = time.perf_counter()
+        self.stats = DatasetStats.build(
+            self.vectors, self.cat, self.num,
+            sample_frac=self.config.sample_frac, seed=self.config.seed,
+        )
+        t1 = time.perf_counter()
+        self.ivf = IVFIndex(self.vectors, self.config.n_lists, seed=self.config.seed).build()
+        t2 = time.perf_counter()
+        self.estimator = SelectivityEstimator(self.stats)
+        self.planner = CorePlanner(seed=self.config.seed)
+        self.feat = PlannerFeatures(self.stats)
+        self.pre_exec = PreFilterExec(self.vectors, self.cat, self.num)
+        self.post_exec = PostFilterExec(
+            self.ivf, self.cat, self.num,
+            alpha0=self.config.alpha0, nprobe0=self.config.nprobe0,
+        )
+        # warm the jit'd pre-filter bucket shapes: per-query utility timings
+        # (planner training labels, §3.1) must not include one-off XLA
+        # compiles — a cold bucket inflates T_search by ~100x and mislabels
+        # the query
+        self._warm_buckets(self.config.default_k)
+        t3 = time.perf_counter()
+        self.build_time_ = {"stats": t1 - t0, "ivf": t2 - t1, "warmup": t3 - t2}
+        return self
+
+    def _warm_buckets(self, k: int):
+        from ..index.flat import l2_topk
+
+        n, d = self.vectors.shape
+        q = np.zeros((1, d), np.float32)
+        p = 16
+        while p <= 2 * n:
+            sub = np.zeros((min(p, 1 << 24), d), np.float32)
+            m = np.ones(sub.shape[0], bool)
+            l2_topk(q, sub, min(k, sub.shape[0]), m)
+            p *= 2
+        l2_topk(q, self.vectors, k)                       # ground-truth shape
+        l2_topk(q, self.vectors, k, np.ones(n, bool))
+
+    # ------------------------------------------------------------------
+    def fit(
+        self,
+        train_queries: Sequence[np.ndarray],
+        train_preds: Sequence[Predicate],
+        k: int = 10,
+        verbose: bool = False,
+    ) -> "FilteredANNEngine":
+        """Paper §3.1: execute both strategies per training query, label by
+        utility U = recall@k / T_search, train estimator GBM + planner MLP."""
+        t0 = time.perf_counter()
+        feats, labels, true_sels = [], [], []
+        for q, pred in zip(train_queries, train_preds):
+            q = np.atleast_2d(q)
+            mask = pred.eval(self.cat, self.num)
+            true_sel = float(mask.mean())
+            td, ti = l2_topk(q, self.vectors, k, mask)        # exact ground truth
+            ti = np.asarray(ti)
+            r_pre = self.pre_exec.search(q, pred, k)
+            r_post = self.post_exec.search(q, pred, k, est_selectivity=true_sel)
+            u_pre = recall_at_k(r_pre.ids, ti) / max(r_pre.elapsed, 1e-7)
+            u_post = recall_at_k(r_post.ids, ti) / max(r_post.elapsed, 1e-7)
+            label = PRE_FILTER if u_pre >= u_post else POST_FILTER
+            est0 = self.estimator.estimate(pred)   # pre-GBM estimate for features
+            feats.append(self.feat.vector(pred, est0, k))
+            labels.append(label)
+            true_sels.append(true_sel)
+            if verbose:
+                print(f"  {pred}: sel={true_sel:.4f} U_pre={u_pre:.1f} U_post={u_post:.1f}")
+        # selectivity estimator GBM trains on the same queries (paper §3.1)
+        self.estimator.fit(list(train_preds), true_sels)
+        # re-extract features with the trained estimator so train/test match
+        feats = [
+            self.feat.vector(p, self.estimator.estimate(p), k)
+            for p in train_preds
+        ]
+        self.planner.fit(np.stack(feats), np.asarray(labels))
+        # warm the single-query predict shape: the first live query must not
+        # pay the (1, F) jit compile (~150 ms) inside its latency budget
+        self.planner.decide(feats[0])
+        self.build_time_["fit"] = time.perf_counter() - t0
+        return self
+
+    # ------------------------------------------------------------------
+    def query(self, q: np.ndarray, pred: Predicate, k: int = 10) -> PlannedResult:
+        """Plan + execute one filtered ANN query."""
+        q = np.atleast_2d(q)
+        t0 = time.perf_counter()
+        est = self.estimator.estimate(pred)
+        fv = self.feat.vector(pred, est, k)
+        decision = int(self.planner.decide(fv)[0]) if self.planner.params else (
+            PRE_FILTER if est < 0.05 else POST_FILTER
+        )
+        plan_overhead = time.perf_counter() - t0
+        if decision == PRE_FILTER:
+            res = self.pre_exec.search(q, pred, k)
+        else:
+            # the estimate also *parameterises* the chosen executor
+            res = self.post_exec.search(q, pred, k, est_selectivity=est)
+        res.elapsed += plan_overhead   # end-to-end includes planning (paper §4.1)
+        return PlannedResult(res, est, decision, plan_overhead)
+
+    def batch_query(
+        self, queries: np.ndarray, preds: Sequence[Predicate], k: int = 10
+    ) -> List[PlannedResult]:
+        return [self.query(queries[i], preds[i], k) for i in range(len(preds))]
+
+    # ------------------------------------------------------------------
+    def ground_truth(self, q: np.ndarray, pred: Predicate, k: int = 10) -> np.ndarray:
+        mask = pred.eval(self.cat, self.num)
+        _, ti = l2_topk(np.atleast_2d(q), self.vectors, k, mask)
+        return np.asarray(ti)

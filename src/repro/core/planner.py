@@ -1,0 +1,231 @@
+"""Core planner: learned execution-strategy classifier (paper §3.3).
+
+A two-hidden-layer MLP (widths 64 and 32, ReLU, softmax) maps query+dataset
+features to a binary decision: PRE_FILTER (0) vs POST_FILTER (1).  Trained
+with Adam (lr 1e-3), batch size 200, up to 500 epochs, L2 regularisation and
+early stopping; the L2 strength is grid-searched with cross-validated
+ROC-AUC as the objective (paper's "small grid search").
+
+Pure JAX (no flax/optax available offline): params are a pytree dict, the
+update step is jit-compiled, inference is one fused matmul chain — the
+"minimal inference overhead" property the paper claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .predicates import Predicate
+from .stats import DatasetStats
+
+__all__ = ["CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER", "roc_auc"]
+
+PRE_FILTER = 0
+POST_FILTER = 1
+
+_HIDDEN = (64, 32)   # paper §3.3
+_EPOCHS = 500
+_BATCH = 200
+_LR = 1e-3
+_PATIENCE = 15
+
+
+def roc_auc(y_true: np.ndarray, scores: np.ndarray) -> float:
+    """ROC-AUC via the rank statistic (Mann-Whitney U)."""
+    y_true = np.asarray(y_true)
+    scores = np.asarray(scores, dtype=np.float64)
+    pos = scores[y_true == 1]
+    neg = scores[y_true == 0]
+    if pos.size == 0 or neg.size == 0:
+        return 0.5
+    order = np.argsort(np.concatenate([pos, neg]), kind="mergesort")
+    ranks = np.empty(order.size)
+    ranks[order] = np.arange(1, order.size + 1)
+    # midranks for ties
+    allv = np.concatenate([pos, neg])
+    sorted_v = np.sort(allv)
+    uniq, start = np.unique(sorted_v, return_index=True)
+    for i, v in enumerate(uniq):
+        end = start[i + 1] if i + 1 < uniq.size else sorted_v.size
+        tie_rows = allv == v
+        ranks[tie_rows] = 0.5 * (start[i] + 1 + end)
+    r_pos = ranks[: pos.size].sum()
+    u = r_pos - pos.size * (pos.size + 1) / 2.0
+    return float(u / (pos.size * neg.size))
+
+
+# ----------------------------------------------------------------------
+# feature construction
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class PlannerFeatures:
+    """Feature extractor: dataset stats + per-query predicate info."""
+
+    stats: DatasetStats
+
+    N_FEATURES = 9
+
+    def vector(self, pred: Predicate, est_sel: float, k: int) -> np.ndarray:
+        st = self.stats
+        kind_onehot = {"label": (1, 0, 0), "range": (0, 1, 0), "mixed": (0, 0, 1)}[pred.kind]
+        return np.array(
+            [
+                np.log10(max(st.n, 1)),          # corpus size
+                st.dim / 1000.0,                 # dimensionality
+                st.dist_measure,                 # vector-distribution measure
+                est_sel,                         # estimated selectivity
+                np.log10(est_sel + 1e-6),        # log-scale selectivity
+                np.log2(max(k, 1)),              # requested k
+                *kind_onehot,                    # predicate type
+            ],
+            dtype=np.float32,
+        )
+
+
+# ----------------------------------------------------------------------
+# the MLP
+# ----------------------------------------------------------------------
+def _init_params(key: jax.Array, n_features: int) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    h1, h2 = _HIDDEN
+
+    def glorot(k, fan_in, fan_out):
+        s = jnp.sqrt(2.0 / (fan_in + fan_out))
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * s
+
+    return {
+        "w1": glorot(k1, n_features, h1), "b1": jnp.zeros(h1),
+        "w2": glorot(k2, h1, h2), "b2": jnp.zeros(h2),
+        "w3": glorot(k3, h2, 2), "b3": jnp.zeros(2),
+    }
+
+
+def _logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def _loss(params, x, y, l2):
+    lg = _logits(params, x)
+    ce = -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(y.shape[0]), y])
+    reg = sum(jnp.sum(p**2) for n, p in params.items() if n.startswith("w"))
+    return ce + l2 * reg
+
+
+@partial(jax.jit, static_argnames=())
+def _adam_step(params, opt_state, x, y, l2, lr, step):
+    """One Adam update (b1=.9, b2=.999)."""
+    grads = jax.grad(_loss)(params, x, y, l2)
+    m, v = opt_state
+    m = jax.tree.map(lambda a, g: 0.9 * a + 0.1 * g, m, grads)
+    v = jax.tree.map(lambda a, g: 0.999 * a + 0.001 * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - 0.9**step), m)
+    vh = jax.tree.map(lambda a: a / (1 - 0.999**step), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8), params, mh, vh)
+    return params, (m, v)
+
+
+class CorePlanner:
+    """Binary execution-strategy classifier."""
+
+    def __init__(self, n_features: int = PlannerFeatures.N_FEATURES, seed: int = 0):
+        self.n_features = n_features
+        self.seed = seed
+        self.params: Optional[Dict[str, jax.Array]] = None
+        self.mu = np.zeros(n_features, np.float32)
+        self.sigma = np.ones(n_features, np.float32)
+        self.best_l2_: float = 1e-4
+        self.val_auc_: float = 0.5
+        self._predict_jit = jax.jit(lambda p, x: jax.nn.softmax(_logits(p, x))[:, 1])
+
+    # ------------------------------------------------------------------
+    def _train_once(self, x, y, l2, seed, val_x=None, val_y=None):
+        key = jax.random.PRNGKey(seed)
+        params = _init_params(key, self.n_features)
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        opt_state = (m, v)
+        n = x.shape[0]
+        rng = np.random.default_rng(seed)
+        best_metric, best_params, bad, step = -np.inf, params, 0, 0
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        for epoch in range(_EPOCHS):
+            perm = rng.permutation(n)
+            for s in range(0, n, _BATCH):
+                idx = perm[s : s + _BATCH]
+                step += 1
+                params, opt_state = _adam_step(
+                    params, opt_state, xj[idx], yj[idx], l2, _LR, step
+                )
+            if val_x is not None and val_x.shape[0]:
+                scores = np.asarray(self._predict_jit(params, jnp.asarray(val_x)))
+                metric = roc_auc(val_y, scores)
+            else:
+                metric = -float(_loss(params, xj, yj, 0.0))
+            if metric > best_metric + 1e-5:
+                best_metric, best_params, bad = metric, params, 0
+            else:
+                bad += 1
+                if bad >= _PATIENCE:
+                    break
+        return best_params, best_metric
+
+    def fit(
+        self,
+        features: np.ndarray,
+        labels: np.ndarray,
+        l2_grid: Sequence[float] = (1e-4, 1e-3),
+        n_folds: int = 2,
+    ) -> "CorePlanner":
+        x = np.asarray(features, np.float32)
+        y = np.asarray(labels, np.int32)
+        self.mu = x.mean(0)
+        self.sigma = x.std(0) + 1e-6
+        xn = (x - self.mu) / self.sigma
+
+        # small grid search over L2 with k-fold CV, ROC-AUC objective
+        n = xn.shape[0]
+        if n >= 3 * n_folds and len(set(y.tolist())) > 1:
+            folds = np.arange(n) % n_folds
+            rng = np.random.default_rng(self.seed)
+            folds = folds[rng.permutation(n)]
+            best_auc, best_l2 = -np.inf, l2_grid[0]
+            for l2 in l2_grid:
+                aucs = []
+                for f in range(n_folds):
+                    tr, va = folds != f, folds == f
+                    if y[va].min() == y[va].max():
+                        continue
+                    p, auc = self._train_once(xn[tr], y[tr], l2, self.seed + f, xn[va], y[va])
+                    aucs.append(auc)
+                mean_auc = float(np.mean(aucs)) if aucs else -np.inf
+                if mean_auc > best_auc:
+                    best_auc, best_l2 = mean_auc, l2
+            self.best_l2_, self.val_auc_ = best_l2, best_auc
+        # final fit on all data with the selected L2 (held-out slice for early stop)
+        n_val = max(4, n // 10)
+        perm = np.random.default_rng(self.seed).permutation(n)
+        va, tr = perm[:n_val], perm[n_val:]
+        val_ok = len(set(y[va].tolist())) > 1
+        self.params, _ = self._train_once(
+            xn[tr], y[tr], self.best_l2_, self.seed,
+            xn[va] if val_ok else None, y[va] if val_ok else None,
+        )
+        return self
+
+    # ------------------------------------------------------------------
+    def predict_proba(self, features: np.ndarray) -> np.ndarray:
+        """P(post-filter is the better strategy) per query."""
+        assert self.params is not None, "planner not trained"
+        x = (np.atleast_2d(features).astype(np.float32) - self.mu) / self.sigma
+        return np.asarray(self._predict_jit(self.params, jnp.asarray(x)))
+
+    def decide(self, features: np.ndarray) -> np.ndarray:
+        """0 = pre-filter, 1 = post-filter, per query row."""
+        return (self.predict_proba(features) >= 0.5).astype(np.int32)

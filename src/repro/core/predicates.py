@@ -1,0 +1,144 @@
+"""Predicate IR for filtered ANN queries.
+
+A filtered ANN query is ``(Q, P, k)`` (paper §3).  ``P`` is a predicate over
+the metadata record attached to each vector.  The paper supports:
+
+* single-label equality            ``color = green``
+* conjunctions of labels           ``color = green AND type = shoes``
+* numeric range                    ``age > 20 AND age < 25``
+* unions of ranges on ONE attr     ``(20 < age < 25) OR age < 10``
+* mixed label + range              ``color = green AND price < 30``
+
+Metadata layout (columnar, fixed dtypes so everything vectorises):
+
+* categorical attributes -> int32 codes, array ``cat``  of shape (N, A_cat)
+* numeric attributes     -> float32,     array ``num``  of shape (N, A_num)
+
+Evaluation returns a boolean mask of shape (N,).  Masks — not compacted
+index lists — are the TPU-native filtered-search currency (DESIGN.md §2);
+the numpy path additionally offers ``nonzero`` compaction for the CPU
+pre-filter executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "LabelEq",
+    "RangePred",
+    "Predicate",
+    "label_ids",
+    "NULL_CODE",
+]
+
+# Code used for "attribute missing" in categorical columns.
+NULL_CODE = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelEq:
+    """``attr == code`` over a categorical attribute."""
+
+    attr: int  # categorical attribute index
+    code: int  # value code within that attribute's dictionary
+
+    def eval(self, cat: np.ndarray, num: np.ndarray) -> np.ndarray:
+        return cat[:, self.attr] == self.code
+
+
+@dataclasses.dataclass(frozen=True)
+class RangePred:
+    """Union of half-open intervals ``lo <= x < hi`` over ONE numeric attribute.
+
+    ``intervals`` is a tuple of (lo, hi) pairs; the union is the full query
+    range (paper §3.2.2: multi-range predicates are unions over the same
+    attribute).  A single interval is the common case.
+    """
+
+    attr: int  # numeric attribute index
+    intervals: Tuple[Tuple[float, float], ...]
+
+    def __post_init__(self):
+        ivs = tuple(sorted((float(lo), float(hi)) for lo, hi in self.intervals))
+        object.__setattr__(self, "intervals", ivs)
+
+    @property
+    def total_width(self) -> float:
+        return float(sum(hi - lo for lo, hi in self.intervals))
+
+    @property
+    def midpoint(self) -> float:
+        los = min(lo for lo, _ in self.intervals)
+        his = max(hi for _, hi in self.intervals)
+        return 0.5 * (los + his)
+
+    def eval(self, cat: np.ndarray, num: np.ndarray) -> np.ndarray:
+        x = num[:, self.attr]
+        m = np.zeros(x.shape[0], dtype=bool)
+        for lo, hi in self.intervals:
+            m |= (x >= lo) & (x < hi)
+        return m
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """Conjunction of label predicates and range predicates (the paper's
+    predicate class).  ``labels`` AND ``ranges`` must all hold."""
+
+    labels: Tuple[LabelEq, ...] = ()
+    ranges: Tuple[RangePred, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "labels", tuple(self.labels))
+        object.__setattr__(self, "ranges", tuple(self.ranges))
+
+    # ---- classification used by the selectivity-estimator router ----
+    @property
+    def n_labels(self) -> int:
+        return len(self.labels)
+
+    @property
+    def n_ranges(self) -> int:
+        return len(self.ranges)
+
+    @property
+    def kind(self) -> str:
+        if self.n_ranges == 0:
+            return "label"
+        if self.n_labels == 0:
+            return "range"
+        return "mixed"
+
+    # ---- evaluation -------------------------------------------------
+    def eval(self, cat: np.ndarray, num: np.ndarray) -> np.ndarray:
+        n = cat.shape[0] if cat.size else num.shape[0]
+        m = np.ones(n, dtype=bool)
+        for p in self.labels:
+            m &= p.eval(cat, num)
+        for p in self.ranges:
+            m &= p.eval(cat, num)
+        return m
+
+    def selectivity(self, cat: np.ndarray, num: np.ndarray) -> float:
+        """Ground-truth selectivity (fraction of points passing)."""
+        return float(self.eval(cat, num).mean())
+
+    def __str__(self) -> str:  # debugging sugar
+        parts = [f"c{p.attr}={p.code}" for p in self.labels]
+        for r in self.ranges:
+            parts.append(
+                "n%d in %s" % (r.attr, "|".join(f"[{lo:.3g},{hi:.3g})" for lo, hi in r.intervals))
+            )
+        return " AND ".join(parts) if parts else "TRUE"
+
+
+def label_ids(pred: Predicate, cat_offsets: Sequence[int]) -> List[int]:
+    """Map each LabelEq to a *global* label id: ``offset[attr] + code``.
+
+    Global label ids index the flattened label space used by the frequency
+    dictionary / co-occurrence matrix in :mod:`repro.core.stats`.
+    """
+    return [cat_offsets[p.attr] + p.code for p in pred.labels]

@@ -1,0 +1,123 @@
+"""Selectivity estimation (paper §3.2).
+
+Routing (faithful to the paper):
+
+* pure range predicate           -> histogram estimate only (no model)
+* single label                   -> exact frequency-dictionary lookup
+* two-label conjunction          -> exact 2-D co-occurrence lookup
+* >=3 labels, or mixed label+range -> GBM over lightweight features, with
+  range features short-circuited to zero for label-only predicates.
+
+Feature vector fed to the GBM (paper §3.2.1 + §3.2.3):
+  0: independence-assumption selectivity           (product of marginals)
+  1: mean pairwise joint selectivity of label pairs
+  2: min  pairwise joint selectivity of label pairs (an upper bound on truth)
+  3: mean PMI over label pairs
+  4: number of labels
+  5: histogram selectivity of the range predicates (product over attrs)
+  6: total width of range spans (normalised per attribute domain)
+  7: midpoint of range spans (normalised)
+  8: sum of label-range pairwise joint selectivities
+"""
+from __future__ import annotations
+
+from itertools import combinations
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .gbm import GradientBoostingRegressor
+from .predicates import Predicate, label_ids
+from .stats import DatasetStats
+
+__all__ = ["SelectivityEstimator", "N_FEATURES"]
+
+N_FEATURES = 9
+
+
+class SelectivityEstimator:
+    """Estimates predicate selectivity from precomputed dataset statistics."""
+
+    def __init__(self, stats: DatasetStats):
+        self.stats = stats
+        self.model: Optional[GradientBoostingRegressor] = None
+
+    # ------------------------------------------------------------------
+    def features(self, pred: Predicate) -> np.ndarray:
+        """Lightweight feature vector for the GBM (paper §3.2.1/§3.2.3)."""
+        st = self.stats
+        lbls = label_ids(pred, st.cat_offsets)
+        f = np.zeros(N_FEATURES, dtype=np.float64)
+
+        # label features
+        f[0] = st.independence_sel(pred)
+        pairs = list(combinations(lbls, 2))
+        if pairs:
+            joints = [st.pair_joint_sel(a, b) for a, b in pairs]
+            pmis = [st.pmi(a, b) for a, b in pairs]
+            f[1] = float(np.mean(joints))
+            f[2] = float(np.min(joints))
+            f[3] = float(np.mean(pmis))
+        elif lbls:
+            s = st.single_label_sel(lbls[0])
+            f[1] = f[2] = s
+        f[4] = float(len(lbls))
+
+        # range features (short-circuited to zero when no ranges, paper §3.2.1)
+        if pred.ranges:
+            rsel = 1.0
+            width = mid = 0.0
+            for r in pred.ranges:
+                rsel *= st.range_sel(r)
+                h = st.hists[r.attr]
+                dom = max(h.hi - h.lo, 1e-12)
+                width += r.total_width / dom
+                mid += (r.midpoint - h.lo) / dom
+            f[5] = rsel
+            f[6] = width / len(pred.ranges)
+            f[7] = mid / len(pred.ranges)
+            f[8] = float(
+                sum(st.label_range_joint(l, r) for l in lbls for r in pred.ranges)
+            )
+        return f
+
+    # ------------------------------------------------------------------
+    def fit(self, preds: Sequence[Predicate], true_sel: Sequence[float]) -> "SelectivityEstimator":
+        """Train the GBM refinement on (predicate, ground-truth selectivity)
+        pairs — in the paper these ground truths come from the same training
+        queries used for the planner, measured on the sampled subset."""
+        rows = [self.features(p) for p in preds]
+        if not rows:
+            return self
+        x = np.stack(rows)
+        y = np.asarray(true_sel, dtype=np.float64)
+        # Predict in logit space for stability near 0.
+        eps = 1e-6
+        z = np.log((y + eps) / (1 - y + eps))
+        self.model = GradientBoostingRegressor().fit(x, z)
+        return self
+
+    # ------------------------------------------------------------------
+    def estimate(self, pred: Predicate) -> float:
+        st = self.stats
+        lbls = label_ids(pred, st.cat_offsets)
+
+        if pred.kind == "range":
+            # Pure range: histograms are enough, no model (paper §3.2.2).
+            s = 1.0
+            for r in pred.ranges:
+                s *= st.range_sel(r)
+            return float(np.clip(s, 0.0, 1.0))
+
+        if pred.kind == "label":
+            if len(lbls) == 1:
+                return st.single_label_sel(lbls[0])          # exact lookup
+            if len(lbls) == 2:
+                return st.pair_joint_sel(lbls[0], lbls[1])   # exact matrix lookup
+
+        # >=3 labels or mixed: GBM refinement (falls back to independence
+        # estimate if the model was never fit).
+        if self.model is None:
+            return float(np.clip(st.independence_sel(pred), 0.0, 1.0))
+        z = float(self.model.predict(self.features(pred)[None, :])[0])
+        return float(np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0))

@@ -1,0 +1,13 @@
+from .flat import FlatIndex, l2_topk, chunked_masked_topk
+from .ivf import IVFIndex
+from .acorn import AcornIndex
+from .kmeans import kmeans
+
+__all__ = [
+    "FlatIndex",
+    "IVFIndex",
+    "AcornIndex",
+    "kmeans",
+    "l2_topk",
+    "chunked_masked_topk",
+]

@@ -1,0 +1,224 @@
+"""ACORN-1 baseline (Patel et al., 2024) — predicate-aware graph search.
+
+ACORN builds a denser-than-usual proximity graph and, at query time, filters
+neighbours by the predicate *during* traversal; ACORN-1 compensates for
+filtered-out neighbours by expanding to 2-hop neighbourhoods when too few
+1-hop neighbours pass.  This file keeps the baseline faithful in behaviour:
+
+* construction: approximate KNN graph of fixed degree M (cluster-blocked
+  exact KNN — dense matmuls, the TPU-friendly construction), deliberately
+  *predicate-agnostic* like ACORN's single global graph;
+* search: best-first beam search (ef candidates) where only predicate-passing
+  nodes enter the result set, with on-demand 2-hop expansion.
+
+Pointer-chasing traversal is the one paper component that does NOT map well
+onto the MXU (DESIGN.md §2 "Assumptions changed"); the numpy implementation
+here is the benchmark baseline, and ``search_jax`` provides a fixed-shape
+`lax.while_loop` variant demonstrating the TPU-compatible formulation.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .kmeans import kmeans
+
+__all__ = ["AcornIndex"]
+
+
+class AcornIndex:
+    def __init__(self, vectors: np.ndarray, m: int = 24, seed: int = 0):
+        self.vectors = np.ascontiguousarray(vectors, np.float32)
+        self.n, self.dim = vectors.shape
+        self.m = m
+        self.seed = seed
+        self.built = False
+
+    # ------------------------------------------------------------------
+    def build(self) -> "AcornIndex":
+        """Approximate degree-M graph via cluster blocking: each point's
+        short edges are its nearest neighbours among the members of its own
+        and the 2 nearest sibling clusters; a reserved fraction of the degree
+        budget goes to random long-range edges (navigable-small-world
+        property — pure KNN graphs are not navigable from a far entry)."""
+        n, m = self.n, self.m
+        m_rand = max(2, m // 4)      # long-range edges per node
+        m_knn = m - m_rand
+        k_clusters = max(4, n // 1024)
+        cent, asg = kmeans(self.vectors, k_clusters, iters=6, seed=self.seed)
+        # nearest 3 clusters for each cluster (self + 2 siblings)
+        cd = ((cent[:, None, :] - cent[None, :, :]) ** 2).sum(-1)
+        np.fill_diagonal(cd, np.inf)
+        sib = np.argsort(cd, axis=1)[:, :2]                      # (K, 2)
+        members = [np.nonzero(asg == c)[0] for c in range(k_clusters)]
+        nbrs = np.full((n, m), -1, np.int32)
+        for c in range(k_clusters):
+            own = members[c]
+            if own.size == 0:
+                continue
+            cand = np.concatenate([own, members[sib[c, 0]], members[sib[c, 1]]])
+            a = self.vectors[own]                                # (o, d)
+            b = self.vectors[cand]                               # (c, d)
+            d2 = (
+                (a * a).sum(1, keepdims=True)
+                + (b * b).sum(1)[None, :]
+                - 2.0 * a @ b.T
+            )
+            # exclude self-edges
+            self_pos = {int(x): j for j, x in enumerate(cand)}
+            for i, p in enumerate(own):
+                d2[i, self_pos[int(p)]] = np.inf
+            take = min(m_knn, cand.size - 1)
+            part = np.argpartition(d2, take - 1, axis=1)[:, :take]
+            for i, p in enumerate(own):
+                order = part[i][np.argsort(d2[i, part[i]])]
+                nbrs[p, :take] = cand[order]
+        # random long-range edges (uniform over the corpus)
+        rng = np.random.default_rng(self.seed + 1)
+        nbrs[:, m_knn:] = rng.integers(0, n, size=(n, m - m_knn), dtype=np.int64).astype(
+            np.int32
+        )
+        self.neighbors = nbrs                                    # (N, M)
+        # entry seeding: a fixed random sample scanned per query (plays the
+        # role of HNSW's upper layers at negligible cost)
+        self.seeds = rng.choice(n, size=min(64, n), replace=False).astype(np.int32)
+        mean = self.vectors.mean(0)
+        self.entry = int(np.argmin(((self.vectors - mean) ** 2).sum(1)))
+        self.built = True
+        return self
+
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        ef: int = 64,
+        mask: Optional[np.ndarray] = None,
+        two_hop: bool = True,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched predicate-aware beam search.  mask (N,) bool or None."""
+        assert self.built
+        q = np.asarray(queries, np.float32)
+        b = q.shape[0]
+        out_d = np.full((b, k), np.inf, np.float32)
+        out_i = np.full((b, k), -1, np.int32)
+        for i in range(b):
+            d, ids = self._search_one(q[i], k, ef, mask, two_hop)
+            out_d[i, : len(ids)] = d
+            out_i[i, : len(ids)] = ids
+        return out_d, out_i
+
+    def _search_one(self, q, k, ef, mask, two_hop):
+        v = self.vectors
+        visited = np.zeros(self.n, bool)
+
+        def dist(ids):
+            x = v[ids]
+            return ((x - q) ** 2).sum(1)
+
+        # entry seeding: best of the fixed seed sample (+ medoid)
+        seed_ids = np.append(self.seeds, self.entry)
+        sd = dist(seed_ids)
+        entry = int(seed_ids[int(np.argmin(sd))])
+        visited[entry] = True
+        d0 = float(((v[entry] - q) ** 2).sum())
+        # candidate heap (min by distance); result heap (max by distance)
+        cand = [(d0, entry)]
+        results = []  # (-d, id) only predicate-passing nodes
+        if mask is None or mask[entry]:
+            results.append((-d0, entry))
+
+        while cand:
+            d, u = heapq.heappop(cand)
+            if len(results) >= ef and -results[0][0] < d:
+                break
+            # 1-hop neighbours
+            nb = self.neighbors[u]
+            nb = nb[nb >= 0]
+            nb = nb[~visited[nb]]
+            # ACORN-1: if filtering starves the frontier, expand 2-hop
+            if two_hop and mask is not None and nb.size:
+                passing = nb[mask[nb]]
+                if passing.size < max(1, nb.size // 4):
+                    hop2 = self.neighbors[nb].reshape(-1)
+                    hop2 = hop2[hop2 >= 0]
+                    hop2 = np.unique(hop2[~visited[hop2]])
+                    nb = np.unique(np.concatenate([nb, hop2]))
+            if nb.size == 0:
+                continue
+            visited[nb] = True
+            dn = dist(nb)
+            for dd, nn in zip(dn, nb):
+                dd = float(dd)
+                worst = -results[0][0] if len(results) >= ef else np.inf
+                if dd < worst:
+                    heapq.heappush(cand, (dd, int(nn)))
+                    if mask is None or mask[nn]:
+                        heapq.heappush(results, (-dd, int(nn)))
+                        if len(results) > ef:
+                            heapq.heappop(results)
+        res = sorted([(-nd, i) for nd, i in results])[:k]
+        return [r[0] for r in res], [r[1] for r in res]
+
+    # ------------------------------------------------------------------
+    def search_jax(self, queries, k: int, ef: int = 64, iters: int = 64, mask=None):
+        """Fixed-shape TPU formulation: beam search as a bounded
+        `lax.while_loop` over a (beam,) frontier with batched neighbour
+        gathers.  Demonstrates the TPU-compatible form of graph traversal;
+        recall is validated against the numpy implementation in tests."""
+        import jax
+        import jax.numpy as jnp
+
+        v = jnp.asarray(self.vectors)
+        nbrs = jnp.asarray(self.neighbors)
+        n, m = self.n, self.m
+        mask_j = jnp.ones(n, bool) if mask is None else jnp.asarray(mask)
+
+        def one(qv):
+            def dist(ids):
+                x = v[jnp.maximum(ids, 0)]
+                return jnp.where(ids >= 0, jnp.sum((x - qv) ** 2, 1), jnp.inf)
+
+            seed_ids = jnp.asarray(np.append(self.seeds, self.entry))
+            sd = dist(seed_ids)
+            entry = seed_ids[jnp.argmin(sd)]
+            beam_i = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
+            beam_d = jnp.full((ef,), jnp.inf).at[0].set(jnp.min(sd))
+            expanded = jnp.zeros((ef,), bool)
+
+            def body(state):
+                beam_i, beam_d, expanded, it = state
+                # pick the nearest unexpanded beam entry
+                sel_d = jnp.where(expanded, jnp.inf, beam_d)
+                u_pos = jnp.argmin(sel_d)
+                u = beam_i[u_pos]
+                expanded = expanded.at[u_pos].set(True)
+                nb = nbrs[jnp.maximum(u, 0)]                     # (M,)
+                nb = jnp.where(u >= 0, nb, -1)
+                nd = dist(nb)
+                # drop ids already in beam (dedup by penalising matches)
+                dup = (nb[:, None] == beam_i[None, :]).any(1)
+                nd = jnp.where(dup, jnp.inf, nd)
+                cat_i = jnp.concatenate([beam_i, nb])
+                cat_d = jnp.concatenate([beam_d, nd])
+                neg, pos = jax.lax.top_k(-cat_d, ef)
+                keep_exp = jnp.concatenate([expanded, jnp.zeros((m,), bool)])[pos]
+                return cat_i[pos], -neg, keep_exp, it + 1
+
+            def cond(state):
+                _, beam_d, expanded, it = state
+                return (it < iters) & (~expanded & jnp.isfinite(beam_d)).any()
+
+            beam_i, beam_d, _, _ = jax.lax.while_loop(
+                cond, body, (beam_i, beam_d, expanded, 0)
+            )
+            ok = (beam_i >= 0) & mask_j[jnp.maximum(beam_i, 0)]
+            beam_d = jnp.where(ok, beam_d, jnp.inf)
+            neg, pos = jax.lax.top_k(-beam_d, k)
+            return -neg, jnp.where(jnp.isinf(-neg), -1, beam_i[pos])
+
+        import jax
+
+        return jax.vmap(one)(jnp.asarray(queries, jnp.float32))

@@ -1,0 +1,137 @@
+"""IVF-Flat index — the global index behind the post-filtering executor.
+
+The paper's post-filtering uses "a global ANN index built at initialization";
+on TPU the idiomatic global index is IVF (probe-list scans are dense matmuls;
+graph indexes serialise the MXU — DESIGN.md §2).  Two search paths share one
+semantics:
+
+* ``search``     — numpy/JAX hybrid, contiguous sorted lists, fast on CPU;
+  used by benchmarks.
+* ``search_jax`` — fully jit-able padded-list path (vmap over queries), the
+  TPU-target form used in the distributed engine and the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kmeans import kmeans
+
+__all__ = ["IVFIndex"]
+
+
+class IVFIndex:
+    def __init__(self, vectors: np.ndarray, n_lists: Optional[int] = None, seed: int = 0):
+        self.vectors_np = np.asarray(vectors, np.float32)
+        self.n, self.dim = vectors.shape
+        self.n_lists = n_lists or max(16, int(np.sqrt(self.n)))
+        self.seed = seed
+        self.built = False
+
+    # ------------------------------------------------------------------
+    def build(self, iters: int = 8) -> "IVFIndex":
+        c, a = kmeans(self.vectors_np, self.n_lists, iters=iters, seed=self.seed)
+        self.centroids = c                                   # (L, d)
+        order = np.argsort(a, kind="stable")
+        self.sorted_ids = order.astype(np.int32)             # (N,)
+        self.sorted_vecs = self.vectors_np[order]            # (N, d) contiguous per list
+        counts = np.bincount(a, minlength=self.n_lists)
+        self.offsets = np.zeros(self.n_lists + 1, np.int64)
+        np.cumsum(counts, out=self.offsets[1:])
+        # padded layout for the jit path
+        self.max_list = int(counts.max())
+        padded = np.full((self.n_lists, self.max_list), -1, np.int32)
+        for l in range(self.n_lists):
+            seg = self.sorted_ids[self.offsets[l] : self.offsets[l + 1]]
+            padded[l, : seg.size] = seg
+        self.padded_ids = padded
+        self._centroids_j = jnp.asarray(c)
+        self._vecs_j = jnp.asarray(self.vectors_np)
+        self._padded_j = jnp.asarray(padded)
+        self.built = True
+        return self
+
+    # ------------------------------------------------------------------
+    # CPU benchmark path: contiguous gathered blocks
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        nprobe: int = 8,
+        mask: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (dists (B,k), ids (B,k)); unfilled slots have id -1/inf.
+        ``mask`` (N,) restricts results to passing points (applied DURING the
+        scan — this is what post-filtering calls with mask=None and what the
+        engine's fused path uses directly)."""
+        assert self.built
+        q = np.asarray(queries, np.float32)
+        b = q.shape[0]
+        nprobe = min(nprobe, self.n_lists)
+        # query -> centroid distances (batch matmul)
+        qc = (
+            (q * q).sum(1, keepdims=True)
+            + (self.centroids * self.centroids).sum(1)[None, :]
+            - 2.0 * q @ self.centroids.T
+        )
+        probes = np.argpartition(qc, nprobe - 1, axis=1)[:, :nprobe]    # (B, nprobe)
+        out_d = np.full((b, k), np.inf, np.float32)
+        out_i = np.full((b, k), -1, np.int32)
+        for i in range(b):
+            segs = [
+                np.arange(self.offsets[l], self.offsets[l + 1]) for l in probes[i]
+            ]
+            rows = np.concatenate(segs) if segs else np.empty(0, np.int64)
+            if rows.size == 0:
+                continue
+            ids = self.sorted_ids[rows]
+            if mask is not None:
+                keep = mask[ids]
+                rows, ids = rows[keep], ids[keep]
+                if ids.size == 0:
+                    continue
+            cand = self.sorted_vecs[rows]
+            d2 = ((cand - q[i]) ** 2).sum(1)
+            kk = min(k, d2.size)
+            sel = np.argpartition(d2, kk - 1)[:kk]
+            order = sel[np.argsort(d2[sel])]
+            out_d[i, :kk] = d2[order]
+            out_i[i, :kk] = ids[order]
+        return out_d, out_i
+
+    # ------------------------------------------------------------------
+    # TPU-target path: fixed shapes, jit + vmap
+    # ------------------------------------------------------------------
+    @partial(jax.jit, static_argnames=("self", "k", "nprobe"))
+    def search_jax(
+        self,
+        queries: jax.Array,
+        k: int,
+        nprobe: int = 8,
+        mask: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        assert self.built
+        nprobe = min(nprobe, self.n_lists)
+        c = self._centroids_j
+        x = self._vecs_j
+        q2 = jnp.sum(queries**2, axis=1, keepdims=True)
+        qc = q2 + jnp.sum(c**2, 1)[None, :] - 2.0 * queries @ c.T
+        _, probes = jax.lax.top_k(-qc, nprobe)              # (B, nprobe)
+
+        def per_query(qv, pl):
+            ids = self._padded_j[pl].reshape(-1)            # (nprobe*max_list,)
+            valid = ids >= 0
+            cand = x[jnp.maximum(ids, 0)]                   # (C, d)
+            d2 = jnp.sum((cand - qv[None, :]) ** 2, axis=1)
+            if mask is not None:
+                valid = valid & mask[jnp.maximum(ids, 0)]
+            d2 = jnp.where(valid, d2, jnp.inf)
+            neg, pos = jax.lax.top_k(-d2, k)
+            return -neg, jnp.where(jnp.isinf(-neg), -1, ids[pos])
+
+        return jax.vmap(per_query)(queries, probes)

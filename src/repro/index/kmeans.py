@@ -1,0 +1,63 @@
+"""Mini-batch-free Lloyd k-means in JAX (used by IVF and graph construction).
+
+jit-compiled; assignment is a dense distance matmul (MXU-friendly), update is
+a segment-sum.  Empty clusters are re-seeded to the points currently farthest
+from their centroid.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["kmeans", "assign"]
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def assign(x: jax.Array, centroids: jax.Array, chunk: int = 131072) -> jax.Array:
+    """Nearest-centroid assignment, chunked over points."""
+    n, d = x.shape
+    c2 = jnp.sum(centroids * centroids, axis=1)
+
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xs = xp.reshape(-1, chunk, d)
+
+    def step(_, xc):
+        d2 = jnp.sum(xc * xc, 1, keepdims=True) + c2[None, :] - 2.0 * xc @ centroids.T
+        return None, jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+    _, parts = jax.lax.scan(step, None, xs)
+    return parts.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("k",), donate_argnums=())
+def _lloyd_iter(x: jax.Array, centroids: jax.Array, k: int):
+    a = assign(x, centroids)
+    one = jnp.ones(x.shape[0], x.dtype)
+    counts = jax.ops.segment_sum(one, a, num_segments=k)
+    sums = jax.ops.segment_sum(x, a, num_segments=k)
+    new_c = sums / jnp.maximum(counts, 1.0)[:, None]
+    # re-seed empty clusters with the points farthest from their centroid
+    d_own = jnp.sum((x - new_c[a]) ** 2, axis=1)
+    far = jnp.argsort(-d_own)[:k]
+    empty = counts < 1.0
+    new_c = jnp.where(empty[:, None], x[far], new_c)
+    return new_c, a
+
+
+def kmeans(
+    x: np.ndarray, k: int, iters: int = 10, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (centroids (k,d), assignment (n,))."""
+    xj = jnp.asarray(x, jnp.float32)
+    rng = np.random.default_rng(seed)
+    init = xj[rng.choice(x.shape[0], size=k, replace=False)]
+    c = init
+    a = None
+    for _ in range(iters):
+        c, a = _lloyd_iter(xj, c, k)
+    return np.asarray(c), np.asarray(a)

@@ -1,0 +1,9 @@
+from .ops import masked_l2_topk, decode_attention
+from .ref import masked_l2_topk_ref, decode_attention_ref
+
+__all__ = [
+    "masked_l2_topk",
+    "decode_attention",
+    "masked_l2_topk_ref",
+    "decode_attention_ref",
+]

@@ -1,0 +1,119 @@
+"""Fused masked-L2-distance + streaming top-k Pallas kernel.
+
+The hot loop of both pre-filtering (masked brute-force scan) and IVF list
+scans (DESIGN.md §2).  The naive formulation materialises the (B, N) distance
+matrix in HBM — at B=256, N=1M that is 1 TB of traffic.  This kernel never
+leaves VMEM: for each query tile it streams corpus tiles HBM->VMEM, computes
+the distance block on the MXU, folds the predicate mask in as +BIG, and
+maintains a running top-k in VMEM scratch; only (B, k) leaves the core.
+
+Grid: (num_query_tiles, num_corpus_tiles) — corpus is the minor axis, so the
+scratch accumulator persists across the corpus sweep of one query tile.
+
+Block shapes (TPU v5e): query tile (128, d), corpus tile (512, d), d padded
+to a multiple of 128 for MXU alignment; k padded to the 128-lane boundary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["masked_l2_topk_kernel", "TQ", "TN", "KPAD"]
+
+TQ = 128     # query tile (sublane-aligned)
+TN = 512     # corpus tile
+KPAD = 128   # top-k buffer width (lane-aligned)
+BIG = 3.4e38  # python float: jnp constants would be captured consts in pallas
+
+
+def _kernel(q_ref, x_ref, m_ref, od_ref, oi_ref, bd_ref, bi_ref, *, n_tiles: int):
+    """q_ref: (TQ, d) — x_ref: (TN, d) — m_ref: (TN, 1) mask as f32 {0,1}
+    od/oi: (TQ, KPAD) outputs — bd/bi: (TQ, KPAD) VMEM scratch."""
+    j = pl.program_id(1)
+
+    # reset the running top-k at the start of each corpus sweep
+    @pl.when(j == 0)
+    def _init():
+        bd_ref[...] = jnp.full((TQ, KPAD), BIG, jnp.float32)
+        bi_ref[...] = jnp.full((TQ, KPAD), -1, jnp.int32)
+
+    q = q_ref[...]
+    x = x_ref[...]
+    m = m_ref[...]  # (TN, 1)
+
+    # squared L2 via the MXU: ||q||^2 + ||x||^2 - 2 q.x
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)                    # (TQ, 1)
+    x2 = jnp.sum(x * x, axis=1)                                   # (TN,)
+    d2 = q2 + x2[None, :] - 2.0 * jnp.dot(
+        q, x.T, preferred_element_type=jnp.float32
+    )                                                             # (TQ, TN)
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = jnp.where(m[:, 0][None, :] > 0, d2, BIG)                 # fold predicate in
+
+    ids = j * TN + jax.lax.broadcasted_iota(jnp.int32, (TQ, TN), 1)
+
+    # merge tile results into the running top-k
+    cat_d = jnp.concatenate([bd_ref[...], d2], axis=1)            # (TQ, KPAD+TN)
+    cat_i = jnp.concatenate([bi_ref[...], ids], axis=1)
+    neg, pos = jax.lax.top_k(-cat_d, KPAD)
+    bd_ref[...] = -neg
+    bi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    # flush on the last corpus tile
+    @pl.when(j == n_tiles - 1)
+    def _flush():
+        d = bd_ref[...]
+        od_ref[...] = d
+        oi_ref[...] = jnp.where(d >= BIG, -1, bi_ref[...])
+
+
+def masked_l2_topk_kernel(
+    queries: jax.Array,  # (B, d) f32, B % TQ == 0
+    corpus: jax.Array,   # (N, d) f32, N % TN == 0, d % 128 == 0
+    mask: jax.Array,     # (N, 1) f32 {0,1}
+    *,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Raw pallas_call; use :mod:`repro.kernels.ops` for the padded wrapper."""
+    b, d = queries.shape
+    n = corpus.shape[0]
+    assert b % TQ == 0 and n % TN == 0, (b, n)
+    grid = (b // TQ, n // TN)
+    kernel = functools.partial(_kernel, n_tiles=grid[1])
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TQ, d), lambda i, j: (i, 0)),      # query tile (stays)
+            pl.BlockSpec((TN, d), lambda i, j: (j, 0)),      # corpus tile (streams)
+            pl.BlockSpec((TN, 1), lambda i, j: (j, 0)),      # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((TQ, KPAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((TQ, KPAD), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, KPAD), jnp.float32),
+            jax.ShapeDtypeStruct((b, KPAD), jnp.int32),
+        ],
+        scratch_shapes=[
+            pl_scratch((TQ, KPAD), jnp.float32),
+            pl_scratch((TQ, KPAD), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, corpus, mask)
+    return out_d, out_i
+
+
+def pl_scratch(shape, dtype):
+    """VMEM scratch shape (TPU); plain scratch in interpret mode."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - interpret-only environments
+        return pl.MemorySpace.ANY(shape, dtype)

@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding/alignment, choose interpret mode off-TPU, and expose the same
+signature as the :mod:`repro.kernels.ref` oracles.  ``interpret=None`` means
+"auto": compiled on TPU backends, interpret elsewhere (this CPU container).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import TS, decode_attention_kernel
+from .masked_l2 import KPAD, TN, TQ, masked_l2_topk_kernel
+
+__all__ = ["masked_l2_topk", "decode_attention"]
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def masked_l2_topk(
+    queries: jax.Array,  # (B, d)
+    corpus: jax.Array,   # (N, d)
+    mask: jax.Array,     # (N,) bool
+    k: int,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused masked brute-force top-k. Matches masked_l2_topk_ref."""
+    assert k <= KPAD, f"k={k} exceeds kernel buffer {KPAD}"
+    b, d = queries.shape
+    n = corpus.shape[0]
+    qp = _pad_to(_pad_to(queries.astype(jnp.float32), 0, TQ), 1, 128)
+    xp = _pad_to(_pad_to(corpus.astype(jnp.float32), 0, TN), 1, 128)
+    mp = _pad_to(mask.astype(jnp.float32)[:, None], 0, TN, value=0.0)
+    out_d, out_i = masked_l2_topk_kernel(
+        qp, xp, mp, interpret=_auto_interpret(interpret)
+    )
+    return out_d[:b, :k], out_i[:b, :k]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(
+    q: jax.Array,        # (B, KV, GQ, dh)
+    k_cache: jax.Array,  # (B, KV, S, dh)
+    v_cache: jax.Array,  # (B, KV, S, dh)
+    length: jax.Array,   # (B,)
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash-decode GQA attention. Matches decode_attention_ref."""
+    s = k_cache.shape[2]
+    kp = _pad_to(k_cache.astype(jnp.float32), 2, TS)
+    vp = _pad_to(v_cache.astype(jnp.float32), 2, TS)
+    out = decode_attention_kernel(
+        q.astype(jnp.float32), kp, vp, length, interpret=_auto_interpret(interpret)
+    )
+    return out

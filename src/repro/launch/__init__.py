@@ -1,0 +1,7 @@
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS (512 host devices) which must only happen for the dry-run entry
+# point, never for tests/benchmarks.
+from .mesh import make_production_mesh, make_local_mesh
+from . import roofline
+
+__all__ = ["make_production_mesh", "make_local_mesh", "roofline"]

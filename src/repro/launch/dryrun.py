@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with ShapeDtypeStruct inputs only (no allocation).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+
+Per cell it records: memory_analysis (proves fit), cost_analysis (FLOPs /
+bytes for §Roofline), the collective-bytes breakdown parsed from the
+optimized HLO, and the derived roofline terms.  Results go to
+``results/dryrun/<arch>__<shape>__<mesh>.json`` and the sweep is resumable
+(--skip-existing).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config
+from ..dist.sharding import batch_sharding, cache_sharding, data_axes, param_sharding
+from ..models.model import Model
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import init_train_state, make_train_step
+from .analytics import analytic_cost
+from .mesh import make_production_mesh
+from .roofline import analyse
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+
+
+def _should_skip(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md §4)"
+    return None
+
+
+def _grad_accum(cfg, shape) -> int:
+    """Microbatch count for the train cells: bounds the per-microbatch
+    activation footprint (saved layer-scan carries scale with B_local; MoE
+    dispatch buffers (B, E, C, D) scale the same way)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 8192 or cfg.is_moe:
+        return 4
+    if cfg.d_model >= 5120 or cfg.family == "ssm":
+        return 2
+    return 1
+
+
+def _model_flops(cfg, shape) -> float:
+    """Useful FLOPs: 6*N*D train (fwd+bwd), 2*N*D inference fwd."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mesh_shape=None, kv_int8: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_int8=True)
+    shape = SHAPES[shape_name]
+    if mesh_shape is not None:
+        from .mesh import make_custom_mesh
+
+        mesh = make_custom_mesh(*mesh_shape)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    fsdp = data_axes(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in fsdp]))
+    batch_shardable = shape.global_batch % n_data == 0 and shape.global_batch >= n_data
+    hints = {
+        "batch": fsdp if batch_shardable else None,
+        "model": "model",
+    }
+    model = Model(cfg, hints=hints)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            state_shape = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.PRNGKey(0))
+            )
+            p_shard = param_sharding(mesh, state_shape.params)
+            state_shard = type(state_shape)(
+                params=p_shard,
+                opt=type(state_shape.opt)(
+                    step=NamedSharding(mesh, P()),
+                    m=param_sharding(mesh, state_shape.opt.m),
+                    v=param_sharding(mesh, state_shape.opt.v),
+                ),
+            )
+            batch_spec = model.input_specs(shape)["batch"]
+            b_shard = batch_sharding(mesh, batch_spec, shape.global_batch)
+            accum = _grad_accum(cfg, shape)
+            step = make_train_step(model, AdamWConfig(), grad_accum=accum)
+            metrics_spec = (
+                {"loss": 0, "grad_norm": 0, "lr_scale": 0}
+                if accum > 1
+                else {"loss": 0, "grad_norm": 0, "lr_scale": 0, "ce": 0, "aux": 0, "tokens": 0}
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, _replicated(mesh, metrics_spec)),
+            )
+            lowered = jitted.lower(state_shape, batch_spec)
+
+        elif shape.kind == "prefill":
+            params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            p_shard = param_sharding(mesh, params_shape)
+            batch_spec = model.input_specs(shape)["batch"]
+            b_shard = batch_sharding(mesh, batch_spec, shape.global_batch)
+            max_len = shape.seq_len + (cfg.frontend_len if cfg.family == "vlm" else 0)
+
+            def prefill(params, batch):
+                return model.prefill(params, batch, max_len)
+
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, max_len)
+            )
+            c_shard = cache_sharding(mesh, cache_shape, shape.global_batch)
+            jitted = jax.jit(
+                prefill,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=(NamedSharding(mesh, P()), c_shard),
+            )
+            lowered = jitted.lower(params_shape, batch_spec)
+
+        else:  # decode
+            params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            p_shard = param_sharding(mesh, params_shape)
+            specs = model.input_specs(shape)
+            cache_spec, tok_spec, len_spec = (
+                specs["cache"], specs["tokens"], specs["lengths"],
+            )
+            c_shard = cache_sharding(mesh, cache_spec, shape.global_batch)
+            fsdp = data_axes(mesh)
+            n_data = int(np.prod([mesh.shape[a] for a in fsdp]))
+            tl = (
+                NamedSharding(mesh, P(fsdp))
+                if shape.global_batch % n_data == 0 and shape.global_batch >= n_data
+                else NamedSharding(mesh, P())
+            )
+            jitted = jax.jit(
+                model.decode_step,
+                in_shardings=(p_shard, c_shard, tl, tl),
+                out_shardings=(NamedSharding(mesh, P()), c_shard),
+            )
+            lowered = jitted.lower(params_shape, cache_spec, tok_spec, len_spec)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        mf = _model_flops(cfg, shape)
+        n_model = mesh.shape["model"]
+        ac = analytic_cost(cfg, shape, n_data=chips // n_model, n_model=n_model)
+        terms = analyse(cost, hlo, chips, model_flops=mf, analytic=ac)
+
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": (
+                f"{mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
+                else ("2x16x16" if multi_pod else "16x16")
+            ),
+            "chips": chips,
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": mem_d,
+            "cost_flops": cost.get("flops", 0.0),
+            "cost_bytes": cost.get("bytes accessed", 0.0),
+            "roofline": terms.to_dict(),
+            "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_active_params(),
+            "model_flops": mf,
+        }
+        print(
+            f"[{arch} x {shape_name} x {result['mesh']}] OK "
+            f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+            f"flops {cost.get('flops', 0):.3g} bytes {cost.get('bytes accessed', 0):.3g} | "
+            f"coll {terms.coll_bytes:.3g}B | bottleneck {terms.bottleneck} | "
+            f"temp {mem_d['temp_bytes']/2**30:.2f} GiB/dev"
+        )
+        return result
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=True,
+             mesh_shape=None, kv_int8=False):
+    mesh_tag = (
+        f"{mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
+        else ("2x16x16" if multi_pod else "16x16")
+    )
+    if kv_int8:
+        mesh_tag += "_kvint8"
+    fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if skip_existing and os.path.exists(fn):
+        print(f"[{arch} x {shape_name} x {mesh_tag}] cached")
+        return json.load(open(fn))
+    reason = _should_skip(arch, shape_name)
+    if reason:
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+            "status": "skipped", "reason": reason,
+        }
+        print(f"[{arch} x {shape_name} x {mesh_tag}] SKIP: {reason}")
+    else:
+        try:
+            result = lower_cell(arch, shape_name, multi_pod,
+                                mesh_shape=mesh_shape, kv_int8=kv_int8)
+        except Exception as e:  # noqa — record the failure, keep sweeping
+            result = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"[{arch} x {shape_name} x {mesh_tag}] ERROR: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(fn, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="custom DATAxMODEL single-pod mesh, e.g. 32x8")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="quantised int8 KV cache (serving hillclimb)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--no-skip-existing", action="store_true")
+    args = ap.parse_args()
+    mesh_shape = (
+        tuple(int(x) for x in args.mesh_shape.split("x")) if args.mesh_shape else None
+    )
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes if mesh_shape is None else [False]:
+                r = run_cell(arch, shape, mp, args.out,
+                             skip_existing=not args.no_skip_existing,
+                             mesh_shape=mesh_shape, kv_int8=args.kv_int8)
+                if r.get("status") == "error":
+                    n_fail += 1
+    print(f"dry-run sweep done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

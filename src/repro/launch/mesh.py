@@ -1,0 +1,30 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_custom_mesh(data: int, model: int):
+    """Single-pod mesh with a custom (data, model) factorisation — the
+    hillclimb lever for rebalancing TP-collective vs FSDP-gather traffic
+    (e.g. MoE train cells prefer (32, 8) over (16, 16); EXPERIMENTS.md §Perf)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_local_mesh():
+    """Degenerate mesh over however many devices exist (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,124 @@
+"""Render the roofline/dry-run tables for EXPERIMENTS.md from the recorded
+results JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun_opt] \
+        [--baseline results/dryrun_baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(d: str) -> List[dict]:
+    return [json.load(open(f)) for f in sorted(glob.glob(os.path.join(d, "*.json")))]
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(rows: List[dict], mesh="16x16") -> str:
+    out = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | "
+        "MODEL_FLOPS | useful | temp GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped" and r["mesh"] == mesh:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* | — | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        mem = r["memory_analysis"]["temp_bytes"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{t['bottleneck']}** | {t['model_flops']:.3g} "
+            f"| {t['useful_ratio']:.2f} | {mem:.2f} | "
+            f"{'yes' if mem < 16 else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(rows: List[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | status | HLO flops/dev | HLO bytes/dev | "
+        "collectives (parsed once-through) | temp GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip: "
+                f"{r['reason'][:60]}… | | | | | |"
+            )
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | |")
+            continue
+        det = r["roofline"].get("coll_detail") or {}
+        n_coll = det.get("count", 0)
+        mem = r["memory_analysis"]["temp_bytes"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['cost_flops']:.3g} | {r['cost_bytes']:.3g} | {n_coll} ops / "
+            f"{det.get('parsed_coll_bytes_once', 0)/2**20:.0f} MiB | {mem:.2f} | "
+            f"{r.get('compile_s', 0):.1f} |"
+        )
+    return "\n".join(out)
+
+
+def before_after(base: List[dict], opt: List[dict]) -> str:
+    bidx = {(r["arch"], r["shape"], r["mesh"]): r for r in base if r.get("status") == "ok"}
+    out = [
+        "| cell | metric | baseline | optimized | Δ |",
+        "|---|---|---|---|---|",
+    ]
+    for r in opt:
+        if r.get("status") != "ok" or r["mesh"] != "16x16":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        b = bidx.get(key)
+        if not b:
+            continue
+        mb = b["memory_analysis"]["temp_bytes"] / 2**30
+        mo = r["memory_analysis"]["temp_bytes"] / 2**30
+        dom_b = max(b["roofline"]["compute_s"], b["roofline"]["memory_s"],
+                    b["roofline"]["collective_s"])
+        dom_o = max(r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                    r["roofline"]["collective_s"])
+        if abs(mb - mo) / max(mb, 1e-9) > 0.05 or abs(dom_b - dom_o) / max(dom_b, 1e-9) > 0.05:
+            out.append(
+                f"| {r['arch']}·{r['shape']} | temp GiB / dominant-term s | "
+                f"{mb:.1f} / {dom_b:.3f} | {mo:.1f} / {dom_o:.3f} | "
+                f"{(1-mo/max(mb,1e-9))*100:+.0f}% mem, {(1-dom_o/max(dom_b,1e-9))*100:+.0f}% time |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_opt")
+    ap.add_argument("--baseline", default="results/dryrun_baseline")
+    ap.add_argument("--mode", default="all", choices=["roofline", "dryrun", "diff", "all"])
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.mode in ("roofline", "all"):
+        print("### Roofline (single pod, 16x16)\n")
+        print(roofline_table(rows))
+    if args.mode in ("dryrun", "all"):
+        print("\n### Dry-run record (both meshes)\n")
+        print(dryrun_table(rows))
+    if args.mode in ("diff", "all") and os.path.isdir(args.baseline):
+        print("\n### Before/after (baseline -> optimized)\n")
+        print(before_after(load(args.baseline), rows))
+
+
+if __name__ == "__main__":
+    main()

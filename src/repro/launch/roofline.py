@@ -1,0 +1,155 @@
+"""Roofline-term derivation from a compiled dry-run artefact.
+
+    compute   = HLO_FLOPs       / (chips x peak_FLOPs)
+    memory    = HLO_bytes       / (chips x HBM_bw)
+    collective= collective_bytes/ (chips x link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective bytes
+are NOT in cost_analysis: we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+__all__ = ["RooflineTerms", "analyse", "collective_bytes", "HW"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# e.g. "bf16[128,4096,5120]{2,1,0}" — capture dtype + dims (layout ignored)
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\](?:\{[0-9,a-zA-Z:()#_\s]*\})?")
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# instruction line: "%name = <shape(s)> <op>(...)", shapes may be tuples with
+# layout annotations
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[\w\[\]\{\},:#()\s]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of OUTPUT operand sizes per collective op kind in an HLO module.
+
+    CAVEAT (recorded in EXPERIMENTS.md): ops inside while-loop bodies (layer
+    scans) are counted ONCE, exactly like ``cost_analysis`` counts their
+    flops once — the analytic model in launch/analytics.py supplies the
+    trip-count-corrected totals; this parse corroborates op *kinds* and
+    per-iteration payloads."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s or "(" not in s:
+            continue
+        m = _INSTR_RE.search(s)
+        if m:
+            out[m.group(2)] += _shape_bytes(m.group(1))
+            out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # total HLO flops (all chips)
+    hbm_bytes: float             # total HLO bytes accessed (all chips)
+    coll_bytes: float            # total collective payload bytes (all chips)
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0     # 6*N*D useful flops
+    useful_ratio: float = 0.0    # model_flops / HLO flops
+    coll_detail: Optional[Dict[str, int]] = None
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        return d
+
+
+def analyse(
+    cost: Dict[str, float],
+    hlo_text: str,
+    chips: int,
+    model_flops: float = 0.0,
+    ici_links: int = 4,
+    analytic=None,
+) -> RooflineTerms:
+    """Derive the three roofline terms.
+
+    Primary source is the ``analytic`` cost model (launch/analytics.py) —
+    XLA's cost_analysis counts while-loop (layer-scan) bodies once, so its
+    raw numbers under-report by ~n_layers; they are still recorded for
+    corroboration.  ``analytic`` carries GLOBAL flops / hbm bytes and
+    per-device collective bytes."""
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    parsed_cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+
+    if analytic is not None:
+        flops = analytic.flops              # global
+        hbm = analytic.hbm_bytes            # global
+        cbytes = analytic.coll_bytes_per_dev
+    else:
+        flops = xla_flops * chips
+        hbm = xla_hbm * chips
+        cbytes = parsed_cbytes
+
+    compute_s = flops / (chips * HW["peak_flops"])
+    memory_s = hbm / (chips * HW["hbm_bw"])
+    # each chip drives `ici_links` links; payload crosses once per hop
+    collective_s = cbytes / (HW["link_bw"] * ici_links)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / flops if flops else 0.0
+    coll["xla_flops_per_dev"] = xla_flops
+    coll["xla_bytes_per_dev"] = xla_hbm
+    coll["parsed_coll_bytes_once"] = parsed_cbytes
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=cbytes,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        coll_detail=coll,
+    )

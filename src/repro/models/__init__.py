@@ -1,0 +1,4 @@
+from .model import Model
+from . import layers, ssm
+
+__all__ = ["Model", "layers", "ssm"]

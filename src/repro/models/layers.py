@@ -1,0 +1,289 @@
+"""Shared transformer building blocks (pure JAX, functional).
+
+Conventions:
+* params are pytrees of fp32 master arrays; compute casts to cfg dtype;
+* activations: (B, S, D); attention heads grouped GQA-style (KV, G, dh)
+  with G = n_heads // n_kv_heads;
+* flash-style attention: lax.scan over query chunks with blockwise softmax —
+  the (S, S) score matrix never materialises (required for the 32k shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+NEG = -2.0e38
+
+
+# ----------------------------------------------------------------------
+# basics
+# ----------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # variance reduction in f32; the normalisation itself stays in the input
+    # dtype — a full f32 copy of the residual stream here would become the
+    # layer-scan's saved carry (observed: XLA stacks the f32 convert).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale.astype(x.dtype))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq           # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def quantize_kv(x: jax.Array):
+    """Per-vector symmetric int8 quantisation over the head dim.
+    x: (..., dh) -> (int8 (..., dh), f32 scale (...)).  Halves the KV-cache
+    HBM traffic that bounds long-context decode (EXPERIMENTS.md §Perf H3)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ----------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,            # (B, Sq, KV, G, dh)
+    k: jax.Array,            # (B, Sk, KV, dh)
+    v: jax.Array,            # (B, Sk, KV, dh)
+    *,
+    q_offset: int = 0,       # absolute position of q[0] (for prefix caches)
+    causal: bool = True,
+    window=None,             # None = full; int/traced scalar = sliding window
+    attn_softcap: float = 0.0,
+    chunk: int = 128,
+) -> jax.Array:
+    """Memory-bounded attention: scan over query chunks; scores per chunk are
+    (B, KV, G, chunk, Sk).  Returns (B, Sq, KV, G, dh).
+
+    chunk=128: at 64 heads / 4k context the fp32 score block is
+    B_loc * H * chunk * S * 4B — 512-wide chunks cost 8.6 GiB/device on the
+    production mesh (observed), 128-wide cost 2.1 GiB."""
+    b, sq, kv, g, dh = q.shape
+    sk = k.shape[1]
+    scale = dh ** -0.5
+    chunk = min(chunk, sq)
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // chunk
+    qs = jnp.moveaxis(q.reshape(b, n_chunks, chunk, kv, g, dh), 1, 0)
+    k_pos = jnp.arange(sk)
+
+    def one_chunk(ci, qc):
+        # qc: (B, chunk, KV, G, dh)
+        scores = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qc.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        scores = softcap(scores, attn_softcap)
+        q_pos = q_offset + ci * chunk + jnp.arange(chunk)
+        m = jnp.ones((chunk, sk), bool)
+        if causal:
+            m &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:  # dynamic: window may be a per-layer scanned scalar
+            m &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(m[None, None, None, :, :], scores, NEG)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    # remat the chunk body: without it, backward saves the (S, S) softmax
+    # weights across all chunks — exactly the matrix flash attention exists
+    # to avoid.  Recompute costs ~1 extra score matmul per chunk.
+    chunk_fn = jax.checkpoint(
+        lambda args: one_chunk(*args),
+        policy=jax.checkpoint_policies.nothing_saveable,
+    )
+    outs = jax.lax.map(chunk_fn, (jnp.arange(n_chunks), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq + pad, kv, g, dh)
+    return out[:, :sq]
+
+
+def decode_attention_xla(
+    q: jax.Array,        # (B, KV, G, dh) one new token
+    k_cache: jax.Array,  # (B, KV, S, dh)
+    v_cache: jax.Array,  # (B, KV, S, dh)
+    length: jax.Array,   # (B,) — number of valid cache positions INCLUDING new
+    *,
+    window=None,
+    attn_softcap: float = 0.0,
+) -> jax.Array:
+    """Single-token attention over the KV cache (XLA path; the Pallas
+    flash-decode kernel in repro.kernels implements the same contract)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum(
+        "bkgd,bksd->bkgs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    scores = softcap(scores, attn_softcap)
+    s = k_cache.shape[2]
+    pos = jnp.arange(s)[None, :]
+    valid = pos < length[:, None]
+    if window is not None:
+        valid &= pos >= (length[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", w, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+@dataclasses.dataclass
+class AttnParams:
+    """Attention weights for one layer (shapes fixed by the config)."""
+
+    @staticmethod
+    def init(key, cfg: ModelConfig) -> dict:
+        d, dh, h, kvh = cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv_heads
+        ks = jax.random.split(key, 4)
+        s = d ** -0.5
+        p = {
+            "wq": jax.random.normal(ks[0], (d, h * dh), jnp.float32) * s,
+            "wk": jax.random.normal(ks[1], (d, kvh * dh), jnp.float32) * s,
+            "wv": jax.random.normal(ks[2], (d, kvh * dh), jnp.float32) * s,
+            "wo": jax.random.normal(ks[3], (h * dh, d), jnp.float32) * (h * dh) ** -0.5,
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros(dh)
+            p["k_norm"] = jnp.zeros(dh)
+        return p
+
+
+def attn_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Project + qk-norm + rope.  x: (B,S,D) -> q (B,S,KV,G,dh), k/v (B,S,KV,dh)."""
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    g = h // kvh
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, dh)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, kvh, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q.reshape(b, s, kvh, g, dh), k, v
+
+
+def attn_out(p: dict, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s = o.shape[:2]
+    return o.reshape(b, s, cfg.n_heads * cfg.dh) @ p["wo"].astype(o.dtype)
+
+
+# ----------------------------------------------------------------------
+# feed-forward
+# ----------------------------------------------------------------------
+def mlp_init(key, d: int, f: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, f), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(ks[1], (d, f), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (f, d), jnp.float32) * f ** -0.5,
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)
+
+
+# ----------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch with capacity)
+# ----------------------------------------------------------------------
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * f ** -0.5,
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp_init(ks[4], d, f)
+    return p
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with GROUPED (per-sequence) capacity dispatch.
+
+    Dispatch is sort-based but vmapped over the batch dim: each row sorts its
+    own S*K (expert, slot) assignments and packs them into a (E, C, D)
+    buffer, so under pjit every step stays batch-sharded — a global argsort
+    over B*S*K would force an all-gather of the whole token stream (observed:
+    ~200 GiB/device before this change).  Capacity is per sequence
+    (GShard-style groups).  Returns (output, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k_experts
+    dt = x.dtype
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)      # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                           # (B, S, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)   # renormalise
+
+    # load-balance aux loss (Switch-style), computed globally
+    density = jnp.zeros((e,)).at[topi.reshape(-1)].add(1.0) / (b * s * k)
+    aux = e * jnp.sum(density * probs.mean((0, 1)))
+
+    cap = int(max(1, cfg.capacity_factor * s * k / e))
+
+    def dispatch_row(xr, er, wr):
+        """xr: (S, D); er/wr: (S, K) -> (out (S, D))."""
+        e_flat = er.reshape(-1)                                    # (S*K,)
+        t_flat = jnp.repeat(jnp.arange(s), k)
+        w_flat = wr.reshape(-1)
+        order = jnp.argsort(e_flat)                                # row-local sort
+        e_sort, t_sort, w_sort = e_flat[order], t_flat[order], w_flat[order]
+        first = jnp.searchsorted(e_sort, e_sort, side="left")
+        slot = jnp.arange(s * k) - first
+        keep = slot < cap
+        slot_c = jnp.minimum(slot, cap - 1)
+        buf = jnp.zeros((e, cap, d), dt)
+        buf = buf.at[e_sort, slot_c].add(
+            jnp.where(keep[:, None], xr[t_sort], 0).astype(dt)
+        )
+        return buf, (e_sort, slot_c, t_sort, w_sort, keep)
+
+    buf, (e_sort, slot_c, t_sort, w_sort, keep) = jax.vmap(
+        dispatch_row
+    )(x, topi, topv)                                               # buf: (B, E, C, D)
+
+    # per-expert SwiGLU: batched dense einsums (MXU-friendly; E can shard)
+    h = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt))
+    ) * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dt))
+    y_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+
+    def combine_row(yb, es, sc, ts, ws, kp):
+        y_slots = yb[es, sc] * (ws * kp)[:, None].astype(dt)       # (S*K, D)
+        return jnp.zeros((s, d), dt).at[ts].add(y_slots)
+
+    out = jax.vmap(combine_row)(y_buf, e_sort, slot_c, t_sort, w_sort, keep)
+    if cfg.moe_shared_expert:
+        out = out + mlp(p["shared"], x.reshape(b * s, d)).reshape(b, s, d)
+    return out, aux

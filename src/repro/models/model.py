@@ -1,0 +1,693 @@
+"""Unified model assembly for all assigned architectures.
+
+One functional ``Model`` API drives training, prefill and decode for every
+family (dense / moe / vlm / encdec / ssm / hybrid):
+
+    model = Model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, lengths)
+
+Layers are stacked and scanned (compile-time is O(1) in depth); attention
+locality (gemma2 local/global alternation, hymba sliding-window + 3 global
+layers) is expressed as a *per-layer window array* scanned alongside the
+params, so one uniform scan covers every pattern.  xLSTM's 7:1 mLSTM:sLSTM
+interleave is a scan over groups (no lax.cond — keeps cost_analysis exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import ssm
+from .layers import (
+    AttnParams,
+    attn_out,
+    attn_qkv,
+    decode_attention_xla,
+    dequantize_kv,
+    flash_attention,
+    mlp,
+    mlp_init,
+    moe_ffn,
+    moe_init,
+    quantize_kv,
+    rms_norm,
+    rope,
+    softcap,
+)
+
+GLOBAL_WINDOW = 2_000_000_000  # "window" value meaning full attention
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ======================================================================
+# parameter init
+# ======================================================================
+def _dense_layer_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros(cfg.d_model),
+        "ln2": jnp.zeros(cfg.d_model),
+        "attn": AttnParams.init(ks[0], cfg),
+        "ffn": moe_init(ks[1], cfg) if cfg.is_moe else mlp_init(ks[1], cfg.d_model, cfg.d_ff),
+    }
+    if cfg.post_norms:
+        p["ln1b"] = jnp.zeros(cfg.d_model)
+        p["ln2b"] = jnp.zeros(cfg.d_model)
+    return p
+
+
+def _hybrid_layer_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros(cfg.d_model),
+        "ln2": jnp.zeros(cfg.d_model),
+        "attn": AttnParams.init(ks[0], cfg),
+        "mamba": ssm.mamba_init(ks[1], cfg),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _encdec_dec_layer_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros(cfg.d_model),
+        "ln_x": jnp.zeros(cfg.d_model),
+        "ln2": jnp.zeros(cfg.d_model),
+        "attn": AttnParams.init(ks[0], cfg),
+        "xattn": AttnParams.init(ks[1], cfg),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _windows(cfg: ModelConfig, n_layers: int) -> jnp.ndarray:
+    """Per-layer attention window (GLOBAL_WINDOW = full attention)."""
+    if cfg.layer_pattern == "local_global":
+        w = [cfg.sliding_window if i % 2 == 0 else GLOBAL_WINDOW for i in range(n_layers)]
+    elif cfg.layer_pattern == "hymba":
+        w = [
+            GLOBAL_WINDOW if i in cfg.global_layers else cfg.sliding_window
+            for i in range(n_layers)
+        ]
+    else:
+        w = [GLOBAL_WINDOW] * n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+# ======================================================================
+# the Model
+# ======================================================================
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    # sharding hints: {"batch": <axis or tuple>, "model": <axis>} — set by the
+    # distributed launchers; None disables constraints (single-device tests).
+    hints: Optional[Dict[str, Any]] = None
+
+    def _hint(self, x: jax.Array, *names: Optional[str]) -> jax.Array:
+        """with_sharding_constraint(x, P(...)) when hints are active.  names
+        are per-dim logical axes ("batch"/"model"/None); GSPMD loses batch
+        sharding inside chunked-attention loop bodies without these."""
+        if not self.hints:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(*[self.hints.get(n) if n else None for n in names])
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_embed, k_layers, k_head, k_enc = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5,
+            "final_ln": jnp.zeros(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                * cfg.d_model ** -0.5
+            )
+
+        if cfg.family == "ssm":
+            params["blocks"] = self._init_xlstm(k_layers)
+        else:
+            init_one = {
+                "dense": _dense_layer_init,
+                "moe": _dense_layer_init,
+                "vlm": _dense_layer_init,
+                "hybrid": _hybrid_layer_init,
+                "encdec": _encdec_dec_layer_init,
+            }[cfg.family]
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            params["layers"] = jax.vmap(lambda k: init_one(k, cfg))(keys)
+
+        if cfg.is_encdec:
+            ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+            enc_cfg = dataclasses.replace(cfg, n_experts=0)
+            params["enc_layers"] = jax.vmap(
+                lambda k: _dense_layer_init(k, enc_cfg)
+            )(ekeys)
+            params["enc_final_ln"] = jnp.zeros(cfg.d_model)
+        return params
+
+    def _init_xlstm(self, key) -> dict:
+        cfg = self.cfg
+        every = max(cfg.slstm_every, 1)
+        n_groups, rem = divmod(cfg.n_layers, every)
+        assert rem == 0, "ssm family requires n_layers % slstm_every == 0"
+        gkeys = jax.random.split(key, n_groups)
+
+        def group_init(k):
+            k_s, k_m = jax.random.split(k)
+            mkeys = jax.random.split(k_m, every - 1)
+            return {
+                "slstm": ssm.slstm_init(k_s, cfg),
+                "slstm_ln": jnp.zeros(cfg.d_model),
+                "mlstm": jax.vmap(lambda kk: ssm.mlstm_init(kk, cfg))(mkeys),
+                "mlstm_ln": jnp.zeros((every - 1, cfg.d_model)),
+            }
+
+        return jax.vmap(group_init)(gkeys)
+
+    # ==================================================================
+    # shared pieces
+    # ==================================================================
+    def _embed(self, params, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"].astype(_dtype(cfg))[tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def _logits(self, params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ).astype(x.dtype)
+        logits = (x @ head).astype(jnp.float32)
+        if logits.ndim == 3:
+            logits = self._hint(logits, "batch", None, "model")
+        return softcap(logits, cfg.final_softcap)
+
+    # ==================================================================
+    # sequence forward (train / prefill), per family
+    # ==================================================================
+    def _attn_block(self, lp, x, w, positions, kv_ext=None):
+        """Self-attention sub-block with residual.  kv_ext: (k, v) override
+        for cross-attention."""
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1" if kv_ext is None else "ln_x"], cfg.norm_eps)
+        ap = lp["attn" if kv_ext is None else "xattn"]
+        if kv_ext is None:
+            q, k, v = attn_qkv(ap, h, cfg, positions)
+            q = self._hint(q, "batch", None, None, None, None)
+            k = self._hint(k, "batch", None, None, None)
+            v = self._hint(v, "batch", None, None, None)
+            o = flash_attention(
+                q, k, v, causal=True, window=w, attn_softcap=cfg.attn_softcap
+            )
+            o = self._hint(o, "batch", None, None, None, None)
+        else:
+            b, s, _ = h.shape
+            kvh, g, dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.dh
+            q = (h @ ap["wq"].astype(h.dtype)).reshape(b, s, kvh, g, dh)
+            k, v = kv_ext
+            o = flash_attention(q, k, v, causal=False, window=None)
+        o = attn_out(ap, o, cfg)
+        if cfg.post_norms and kv_ext is None:
+            o = rms_norm(o, lp["ln1b"], cfg.norm_eps)
+        return x + o
+
+    def _ffn_block(self, lp, x, aux):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, a = moe_ffn(lp["ffn"], h, cfg)
+            aux = aux + a
+        else:
+            f = mlp(lp["ffn"], h)
+        if cfg.post_norms:
+            f = rms_norm(f, lp["ln2b"], cfg.norm_eps)
+        return x + f, aux
+
+    def _decoder_forward(self, params, x, positions, enc_kv=None):
+        """Scan over decoder layers.  x: (B,S,D) embeddings."""
+        cfg = self.cfg
+        windows = _windows(cfg, cfg.n_layers)
+
+        if cfg.family == "ssm":
+            return self._xlstm_forward(params, x)
+
+        # enter the scan with the carry D-sharded so the saved per-layer
+        # residual stack (L, B, S, D) matches the in-scan exit hint
+        x = self._hint(x, "batch", None, "model")
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, w = xs
+            x = self._attn_block(lp, x, w, positions)
+            if cfg.family == "hybrid":
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                m_out, _ = ssm.mamba_seq(lp["mamba"], h, cfg)
+                x = x + m_out
+            if enc_kv is not None:
+                x = self._attn_block(lp, x, None, positions, kv_ext=enc_kv)
+            x, aux = self._ffn_block(lp, x, aux)
+            # carry leaves the step D-sharded over `model`: the scan's saved
+            # per-layer residuals (L, B, S, D) shrink by the TP degree
+            # (sequence-parallel-style); the next layer re-gathers at qkv.
+            x = self._hint(x, "batch", None, "model")
+            return (x, aux), None
+
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), (params["layers"], windows))
+        return x, aux
+
+    def _xlstm_forward(self, params, x):
+        cfg = self.cfg
+
+        def group_body(carry, gp):
+            x, aux = carry
+            h, _ = ssm.slstm_seq(
+                gp["slstm"], rms_norm(x, gp["slstm_ln"], cfg.norm_eps), cfg
+            )
+            x = x + h
+
+            def m_body(xc, mp):
+                lp, ln = mp
+                h, _ = ssm.mlstm_seq(lp, rms_norm(xc, ln, cfg.norm_eps), cfg)
+                return xc + h, None
+
+            x, _ = jax.lax.scan(m_body, x, (gp["mlstm"], gp["mlstm_ln"]))
+            return (x, aux), None
+
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        (x, aux), _ = jax.lax.scan(group_body, (x, 0.0), params["blocks"])
+        return x, aux
+
+    def _encoder_forward(self, params, frames):
+        """Bidirectional encoder over stub frame embeddings (B,F,D)."""
+        cfg = self.cfg
+        positions = jnp.arange(frames.shape[1])[None, :]
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, cfg, positions)
+            o = flash_attention(q, k, v, causal=False, window=None)
+            x = x + attn_out(lp["attn"], o, cfg)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + mlp(lp["ffn"], h), None
+
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, frames.astype(_dtype(cfg)), params["enc_layers"])
+        return rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+    # ==================================================================
+    # public: forward / loss
+    # ==================================================================
+    def _hidden(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        """Final hidden states over the token positions (pre-logits)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        n_prefix = 0
+
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype)     # (B,P,D) stub embeds
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        x = self._hint(x, "batch", None, None)
+
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        enc_kv = None
+        if cfg.is_encdec:
+            enc_out = self._encoder_forward(params, batch["frames"])
+            # cross-attention keys/values from encoder output (shared across
+            # decoder layers — backbone simplification, see DESIGN.md)
+            b, f, _ = enc_out.shape
+            kvh, dh = cfg.n_kv_heads, cfg.dh
+            lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+            k = (enc_out @ lp0["xattn"]["wk"].astype(x.dtype)).reshape(b, f, kvh, dh)
+            v = (enc_out @ lp0["xattn"]["wv"].astype(x.dtype)).reshape(b, f, kvh, dh)
+            enc_kv = (k, v)
+
+        x, aux = self._decoder_forward(params, x, positions, enc_kv=enc_kv)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        return x, aux
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        """Teacher-forced logits over the token positions.  Returns
+        (logits (B,S,V) fp32, aux_loss)."""
+        x, aux = self._hidden(params, batch)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Chunked cross-entropy: the (B,S,V) fp32 logits tensor never
+        materialises — CE is computed per sequence chunk with remat, which at
+        256k-vocab saves ~4 full (T,V) fp32 buffers."""
+        cfg = self.cfg
+        x, aux = self._hidden(params, batch)
+        labels = batch["labels"]
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ).astype(x.dtype)
+
+        b, s, d = x.shape
+        ch = min(512, s)
+        pad = (-s) % ch
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        n_chunks = x.shape[1] // ch
+        xs = jnp.moveaxis(x.reshape(b, n_chunks, ch, d), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(b, n_chunks, ch), 1, 0)
+
+        def chunk_ce(carry, inp):
+            xc, lc = inp                                   # (B,ch,D), (B,ch)
+            logits = (xc @ head).astype(jnp.float32)
+            logits = self._hint(logits, "batch", None, "model")
+            logits = softcap(logits, cfg.final_softcap)
+            valid = lc >= 0
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, jnp.maximum(lc, 0)[..., None], axis=-1
+            )[..., 0]
+            ce = jnp.where(valid, lse - ll, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        chunk_ce = jax.checkpoint(
+            chunk_ce, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        (ce_sum, n_tok), _ = jax.lax.scan(chunk_ce, (0.0, 0), (xs, ls))
+        n_tok = jnp.maximum(n_tok, 1)
+        loss = ce_sum / n_tok
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "aux": aux, "tokens": n_tok}
+
+    # ==================================================================
+    # serving: cache init / prefill / decode
+    # ==================================================================
+    def init_cache(self, b: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        kvh, dh, L = cfg.n_kv_heads, cfg.dh, cfg.n_layers
+        cache: Dict[str, Any] = {}
+        if cfg.family != "ssm":
+            cdt = jnp.int8 if cfg.kv_cache_int8 else dt
+            cache["k"] = jnp.zeros((L, b, kvh, max_len, dh), cdt)
+            cache["v"] = jnp.zeros((L, b, kvh, max_len, dh), cdt)
+            if cfg.kv_cache_int8:
+                # per-(position, head) scales — 2/dh relative overhead
+                cache["k_scale"] = jnp.zeros((L, b, kvh, max_len), jnp.float32)
+                cache["v_scale"] = jnp.zeros((L, b, kvh, max_len), jnp.float32)
+        if cfg.family == "hybrid":
+            st = ssm.mamba_state(b, cfg, jnp.float32)
+            cache["ssm_h"] = jnp.zeros((L,) + st["h"].shape, jnp.float32)
+            cache["ssm_conv"] = jnp.zeros((L,) + st["conv"].shape, jnp.float32)
+        if cfg.family == "ssm":
+            every = max(cfg.slstm_every, 1)
+            g = cfg.n_layers // every
+            s_st = ssm.slstm_state(b, cfg)
+            m_st = ssm.mlstm_state(b, cfg)
+            cache["slstm"] = jax.tree.map(
+                lambda a: jnp.zeros((g,) + a.shape, a.dtype), s_st
+            )
+            cache["mlstm"] = jax.tree.map(
+                lambda a: jnp.zeros((g, every - 1) + a.shape, a.dtype), m_st
+            )
+            # stabiliser states start at -1e30, not 0
+            cache["slstm"]["m"] = jnp.full_like(cache["slstm"]["m"], -1e30)
+            cache["mlstm"]["m"] = jnp.full_like(cache["mlstm"]["m"], -1e30)
+        if cfg.is_encdec:
+            cache["xk"] = jnp.zeros((b, cfg.frontend_len, kvh, dh), dt)
+            cache["xv"] = jnp.zeros((b, cfg.frontend_len, kvh, dh), dt)
+        return cache
+
+    def prefill(self, params, batch, max_len: int):
+        """Run the prompt through the model, returning (last-token logits,
+        populated cache).  For encdec the 'prompt' is the encoder input."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache = self.init_cache(b, max_len)
+        x = self._embed(params, tokens)
+        n_prefix = 0
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            n_prefix = batch["patches"].shape[1]
+        x = self._hint(x, "batch", None, None)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        enc_kv = None
+        if cfg.is_encdec:
+            enc_out = self._encoder_forward(params, batch["frames"])
+            bb, f, _ = enc_out.shape
+            kvh, dh = cfg.n_kv_heads, cfg.dh
+            lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+            xk = (enc_out @ lp0["xattn"]["wk"].astype(x.dtype)).reshape(bb, f, kvh, dh)
+            xv = (enc_out @ lp0["xattn"]["wv"].astype(x.dtype)).reshape(bb, f, kvh, dh)
+            cache["xk"], cache["xv"] = xk, xv
+            enc_kv = (xk, xv)
+
+        if cfg.family == "ssm":
+            x, states = self._xlstm_prefill(params, x)
+            cache.update(states)
+            logits = self._logits(params, x[:, -1:, :])[:, 0]
+            return logits, cache
+
+        windows = _windows(cfg, cfg.n_layers)
+        seq_len = x.shape[1]
+
+        def body(carry, xs):
+            x = carry
+            lp, w = xs
+            cfg_ = self.cfg
+            x = self._hint(x, "batch", None, None)
+            h = rms_norm(x, lp["ln1"], cfg_.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, cfg_, positions)
+            q = self._hint(q, "batch", None, None, None, None)
+            k = self._hint(k, "batch", None, None, None)
+            v = self._hint(v, "batch", None, None, None)
+            o = flash_attention(q, k, v, causal=True, window=w,
+                                attn_softcap=cfg_.attn_softcap)
+            o = self._hint(o, "batch", None, None, None, None)
+            o_p = attn_out(lp["attn"], o, cfg_)
+            if cfg_.post_norms:
+                o_p = rms_norm(o_p, lp["ln1b"], cfg_.norm_eps)
+            x = x + o_p
+            new_states = {}
+            if cfg_.family == "hybrid":
+                hh = rms_norm(x, lp["ln1"], cfg_.norm_eps)
+                m_out, m_state = ssm.mamba_seq(lp["mamba"], hh, cfg_)
+                x = x + m_out
+                new_states = {"ssm_h": m_state["h"], "ssm_conv": m_state["conv"]}
+            if enc_kv is not None:
+                x = self._attn_block(lp, x, None, positions, kv_ext=enc_kv)
+            x, _ = self._ffn_block(lp, x, 0.0)
+            # cache layout (B, KV, S, dh)
+            kc = jnp.moveaxis(k, 1, 2)
+            vc = jnp.moveaxis(v, 1, 2)
+            out = {"k": kc, "v": vc, **new_states}
+            if cfg.kv_cache_int8:
+                out["k"], out["k_scale"] = quantize_kv(kc)
+                out["v"], out["v_scale"] = quantize_kv(vc)
+            return x, out
+
+        x, per_layer = jax.lax.scan(body, x, (params["layers"], windows))
+        pad = max_len - seq_len
+        cache["k"] = jnp.pad(per_layer["k"], ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        cache["v"] = jnp.pad(per_layer["v"], ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        if cfg.kv_cache_int8:
+            cache["k_scale"] = jnp.pad(
+                per_layer["k_scale"], ((0, 0), (0, 0), (0, 0), (0, pad))
+            )
+            cache["v_scale"] = jnp.pad(
+                per_layer["v_scale"], ((0, 0), (0, 0), (0, 0), (0, pad))
+            )
+        if cfg.family == "hybrid":
+            cache["ssm_h"] = per_layer["ssm_h"]
+            cache["ssm_conv"] = per_layer["ssm_conv"]
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    def _xlstm_prefill(self, params, x):
+        cfg = self.cfg
+
+        def group_body(x, gp):
+            h, s_state = ssm.slstm_seq(
+                gp["slstm"], rms_norm(x, gp["slstm_ln"], cfg.norm_eps), cfg
+            )
+            x = x + h
+
+            def m_body(xc, mp):
+                lp, ln = mp
+                h, m_state = ssm.mlstm_seq(lp, rms_norm(xc, ln, cfg.norm_eps), cfg)
+                return xc + h, m_state
+
+            x, m_states = jax.lax.scan(m_body, x, (gp["mlstm"], gp["mlstm_ln"]))
+            return x, {"slstm": s_state, "mlstm": m_states}
+
+        x, states = jax.lax.scan(group_body, x, params["blocks"])
+        return x, states
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params, cache, tokens: jax.Array, lengths: jax.Array):
+        """One decode step.  tokens: (B,) int32; lengths: (B,) — current cache
+        fill (the new token is written at ``lengths``).  Returns
+        (logits (B,V), updated cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = self._embed(params, tokens[:, None])           # (B,1,D)
+        positions = lengths[:, None]
+
+        if cfg.family == "ssm":
+            return self._xlstm_decode(params, cache, x)
+
+        windows = _windows(cfg, cfg.n_layers)
+        kvh, g, dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.dh
+        enc_kv = (cache["xk"], cache["xv"]) if cfg.is_encdec else None
+
+        def body(x, xs):
+            if cfg.kv_cache_int8 and cfg.family == "hybrid":
+                lp, w, kc, vc, ksc, vsc, ssm_h, ssm_conv = xs
+            elif cfg.kv_cache_int8:
+                lp, w, kc, vc, ksc, vsc = xs
+            elif cfg.family == "hybrid":
+                lp, w, kc, vc, ssm_h, ssm_conv = xs
+            else:
+                lp, w, kc, vc = xs
+            x = self._hint(x, "batch", None, None)
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, cfg, positions)
+            # write the new kv at position `lengths` (per-sequence)
+            if cfg.kv_cache_int8:
+                kq, ks_new = quantize_kv(k[:, 0])
+                vq, vs_new = quantize_kv(v[:, 0])
+                kc = kc.at[jnp.arange(b), :, lengths, :].set(kq)
+                vc = vc.at[jnp.arange(b), :, lengths, :].set(vq)
+                ksc = ksc.at[jnp.arange(b), :, lengths].set(ks_new)
+                vsc = vsc.at[jnp.arange(b), :, lengths].set(vs_new)
+                k_att = dequantize_kv(kc, ksc).astype(x.dtype)
+                v_att = dequantize_kv(vc, vsc).astype(x.dtype)
+            else:
+                kc = kc.at[jnp.arange(b), :, lengths, :].set(k[:, 0])
+                vc = vc.at[jnp.arange(b), :, lengths, :].set(v[:, 0])
+                k_att, v_att = kc, vc
+            o = decode_attention_xla(
+                q[:, 0], k_att, v_att, lengths + 1,
+                window=w, attn_softcap=cfg.attn_softcap,
+            )[:, None]
+            o_p = attn_out(lp["attn"], o.reshape(b, 1, kvh, g, dh), cfg)
+            if cfg.post_norms:
+                o_p = rms_norm(o_p, lp["ln1b"], cfg.norm_eps)
+            x = x + o_p
+            out_extra = {}
+            if cfg.family == "hybrid":
+                hh = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                m_out, m_state = ssm.mamba_step(
+                    lp["mamba"], hh[:, 0], cfg, {"h": ssm_h, "conv": ssm_conv}
+                )
+                x = x + m_out[:, None]
+                out_extra = {"ssm_h": m_state["h"], "ssm_conv": m_state["conv"]}
+            if enc_kv is not None:
+                x = self._attn_block(lp, x, None, positions, kv_ext=enc_kv)
+            x, _ = self._ffn_block(lp, x, 0.0)
+            out = {"k": kc, "v": vc, **out_extra}
+            if cfg.kv_cache_int8:
+                out["k_scale"], out["v_scale"] = ksc, vsc
+            return x, out
+
+        xs = [params["layers"], windows, cache["k"], cache["v"]]
+        if cfg.kv_cache_int8:
+            xs += [cache["k_scale"], cache["v_scale"]]
+        if cfg.family == "hybrid":
+            xs += [cache["ssm_h"], cache["ssm_conv"]]
+        x, updated = jax.lax.scan(body, x, tuple(xs))
+        cache = dict(cache)
+        for key in updated:
+            cache[key] = updated[key]
+        logits = self._logits(params, x)[:, 0]
+        return logits, cache
+
+    def _xlstm_decode(self, params, cache, x):
+        cfg = self.cfg
+
+        def group_body(x, xs):
+            gp, s_state, m_states = xs
+            h, s_new = ssm.slstm_step(
+                gp["slstm"], rms_norm(x, gp["slstm_ln"], cfg.norm_eps)[:, 0], cfg, s_state
+            )
+            x = x + h[:, None]
+
+            def m_body(xc, mp):
+                lp, ln, st = mp
+                h, st_new = ssm.mlstm_step(
+                    lp, rms_norm(xc, ln, cfg.norm_eps)[:, 0], cfg, st
+                )
+                return xc + h[:, None], st_new
+
+            x, m_new = jax.lax.scan(m_body, x, (gp["mlstm"], gp["mlstm_ln"], m_states))
+            return x, {"slstm": s_new, "mlstm": m_new}
+
+        x, new_states = jax.lax.scan(
+            group_body, x, (params["blocks"], cache["slstm"], cache["mlstm"])
+        )
+        cache = dict(cache)
+        cache["slstm"], cache["mlstm"] = new_states["slstm"], new_states["mlstm"]
+        logits = self._logits(params, x)[:, 0]
+        return logits, cache
+
+    # ==================================================================
+    # input specs for the dry-run (no allocation)
+    # ==================================================================
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every input of the step function
+        matching this shape cell (train -> loss/train_step inputs; prefill ->
+        prompt batch; decode -> token + cache)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = _dtype(cfg)
+        sd = jax.ShapeDtypeStruct
+
+        if shape.kind == "train":
+            batch = {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+            if cfg.family == "vlm":
+                batch["patches"] = sd((b, cfg.frontend_len, cfg.d_model), dt)
+            if cfg.is_encdec:
+                batch["frames"] = sd((b, cfg.frontend_len, cfg.d_model), dt)
+            return {"batch": batch}
+
+        if shape.kind == "prefill":
+            batch = {"tokens": sd((b, s), i32)}
+            if cfg.family == "vlm":
+                batch["patches"] = sd((b, cfg.frontend_len, cfg.d_model), dt)
+            if cfg.is_encdec:
+                batch["frames"] = sd((b, cfg.frontend_len, cfg.d_model), dt)
+            return {"batch": batch}
+
+        # decode: one token against a cache of size seq_len
+        cache_spec = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {
+            "cache": cache_spec,
+            "tokens": sd((b,), i32),
+            "lengths": sd((b,), i32),
+        }

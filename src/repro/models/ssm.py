@@ -1,0 +1,347 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and Mamba-style S6.
+
+All three expose a sequence form (``*_seq`` — lax.scan over time, used by
+train/prefill) and a single-step form (``*_step`` — O(1) state update, used
+by decode).  States are explicit pytrees so the serving cache can shard and
+checkpoint them like KV caches.
+
+These recurrences are the reason the ssm/hybrid architectures run the
+long_500k decode cell: per-token cost is independent of context length.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+# ----------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating with stabiliser)
+# ----------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * dh), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, h * dh), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, h * dh), jnp.float32) * s,
+        "wi": jax.random.normal(ks[3], (d, h), jnp.float32) * s,
+        "wf": jax.random.normal(ks[4], (d, h), jnp.float32) * s,
+        "w_gate": jax.random.normal(ks[5], (d, h * dh), jnp.float32) * s,
+        "w_out": jax.random.normal(ks[6], (h * dh, d), jnp.float32) * (h * dh) ** -0.5,
+    }
+
+
+def mlstm_state(b: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    h, dh = cfg.n_heads, cfg.dh
+    return {
+        "C": jnp.zeros((b, h, dh, dh), dtype),
+        "n": jnp.zeros((b, h, dh), dtype),
+        "m": jnp.full((b, h), -1e30, dtype),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One time step.  q/k/v: (B,H,dh); i/f raw gates: (B,H)."""
+    q, k, v, ir, fr = qkvif
+    C, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    logf = jax.nn.log_sigmoid(fr)                       # stable forget in log space
+    m_new = jnp.maximum(logf + m, ir)
+    i_g = jnp.exp(ir - m_new)[..., None]                # (B,H,1)
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    k_s = k / (dh ** 0.5)
+    C = f_g[..., None] * C + i_g[..., None] * (k_s[..., :, None] * v[..., None, :])
+    n = f_g * n + i_g * k_s
+    hnum = jnp.einsum("bhd,bhde->bhe", q, C)
+    hden = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    hden = jnp.maximum(hden, jnp.exp(-m_new))[..., None]
+    h = hnum / hden
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunk(state, qkvif, dh_scale):
+    """Chunkwise-parallel mLSTM (stabilised): one chunk of T steps as dense
+    matmuls instead of T sequential state updates.
+
+    WHY: the per-step recurrence keeps a (dh x dh) matrix state per head per
+    step alive for the backward pass — at 4k context that stacked residual
+    was ~390 GiB/device (observed).  The chunkwise form touches the matrix
+    state only at chunk boundaries; intra-chunk interactions become a masked
+    (T, T) attention-like product that the MXU eats directly.
+
+    q/k/v: (B,H,T,dh); ir/lf: (B,H,T) raw input gate / log-sigmoid forget.
+    state: C (B,H,dh,dh), n (B,H,dh), m (B,H).
+    """
+    q, k, v, ir, lf = qkvif
+    C0, n0, m0 = state["C"], state["n"], state["m"]
+    t = q.shape[2]
+    ks = k * dh_scale
+
+    b_cum = jnp.cumsum(lf, axis=-1)                       # (B,H,T) inclusive
+    # intra-chunk log-weights: logW[t,s] = b_t - b_s + i_s   (s <= t)
+    logw = b_cum[..., :, None] - b_cum[..., None, :] + ir[..., None, :]
+    tri = jnp.tril(jnp.ones((t, t), bool))
+    logw = jnp.where(tri, logw, -jnp.inf)
+    # inter-chunk decay: g_t = b_t + m0
+    g = b_cum + m0[..., None]                             # (B,H,T)
+    m_t = jnp.maximum(g, jnp.max(logw, axis=-1))          # stabiliser per step
+    w = jnp.exp(logw - m_t[..., None])                    # (B,H,T,T)
+    inter = jnp.exp(g - m_t)                              # (B,H,T)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, ks)         # (B,H,T,T)
+    h_num = jnp.einsum("bhts,bhsd->bhtd", w * scores, v)
+    h_num += inter[..., None] * jnp.einsum("bhtd,bhde->bhte", q, C0)
+    denom = jnp.einsum("bhts,bhts->bht", w, scores)
+    denom += inter * jnp.einsum("bhtd,bhd->bht", q, n0)
+    h = h_num / jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))[..., None]
+
+    # chunk-final state
+    gT = b_cum[..., -1:] + m0[..., None]                  # (B,H,1)
+    logwT = b_cum[..., -1:] - b_cum + ir                  # (B,H,T)
+    m_new = jnp.maximum(gT[..., 0], jnp.max(logwT, axis=-1))
+    wT = jnp.exp(logwT - m_new[..., None])                # (B,H,T)
+    decay0 = jnp.exp(gT[..., 0] - m_new)                  # (B,H)
+    C = decay0[..., None, None] * C0 + jnp.einsum(
+        "bht,bhtd,bhte->bhde", wT, ks, v
+    )
+    n = decay0[..., None] * n0 + jnp.einsum("bht,bhtd->bhd", wT, ks)
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def mlstm_seq(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    """x: (B,S,D) -> (y (B,S,D), final state).  Chunkwise-parallel form."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.dh
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, h, dh).astype(jnp.float32)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, h, dh).astype(jnp.float32)
+    ir = (x @ p["wi"].astype(dt)).astype(jnp.float32)   # (B,S,H)
+    fr = (x @ p["wf"].astype(dt)).astype(jnp.float32)
+    if state is None:
+        state = mlstm_state(b, cfg)
+
+    ch = min(MLSTM_CHUNK, s)
+    pad = (-s) % ch
+    if pad:
+        # i gate -inf -> padded steps contribute nothing; f raw +30 -> no decay
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ir = jnp.pad(ir, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        fr = jnp.pad(fr, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+    sp = q.shape[1]
+    n_chunks = sp // ch
+
+    def to_chunks(a):       # (B,S,H,...) -> (n_chunks, B, H, ch, ...)
+        a = jnp.moveaxis(a, 2, 1)                            # (B,H,S,...)
+        a = a.reshape(a.shape[0], a.shape[1], n_chunks, ch, *a.shape[3:])
+        return jnp.moveaxis(a, 2, 0)
+
+    lf = jax.nn.log_sigmoid(fr)
+    xs = (to_chunks(q), to_chunks(k), to_chunks(v),
+          to_chunks(ir[..., None])[..., 0], to_chunks(lf[..., None])[..., 0])
+
+    chunk_fn = jax.checkpoint(
+        lambda st, inp: _mlstm_chunk(st, inp, dh ** -0.5),
+        policy=jax.checkpoint_policies.nothing_saveable,
+    )
+    state, hs = jax.lax.scan(chunk_fn, state, xs)       # hs: (n_chunks,B,H,ch,dh)
+    y = jnp.moveaxis(hs, 0, 2).reshape(b, h, sp, dh)    # (B,H,S,dh)
+    y = jnp.moveaxis(y, 1, 2)[:, :s].reshape(b, s, h * dh).astype(dt)
+    y = y * jax.nn.silu(x @ p["w_gate"].astype(dt))
+    return y @ p["w_out"].astype(dt), state
+
+
+def mlstm_step(p: dict, x: jax.Array, cfg: ModelConfig, state):
+    """x: (B,D) one token -> (y (B,D), state).  O(1) per-step cell (the
+    chunkwise form and this cell share the same (C, n, m) state contract —
+    validated in tests)."""
+    b, d = x.shape
+    h, dh = cfg.n_heads, cfg.dh
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, h, dh).astype(jnp.float32)
+    k = (x @ p["wk"].astype(dt)).reshape(b, h, dh).astype(jnp.float32)
+    v = (x @ p["wv"].astype(dt)).reshape(b, h, dh).astype(jnp.float32)
+    ir = (x @ p["wi"].astype(dt)).astype(jnp.float32)
+    fr = (x @ p["wf"].astype(dt)).astype(jnp.float32)
+    state, hh = _mlstm_cell(state, (q, k, v, ir, fr))
+    y = hh.reshape(b, h * dh).astype(dt)
+    y = y * jax.nn.silu(x @ p["w_gate"].astype(dt))
+    return y @ p["w_out"].astype(dt), state
+
+
+# ----------------------------------------------------------------------
+# sLSTM (scalar memory with recurrent hidden mixing, per head)
+# ----------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wz": jax.random.normal(ks[0], (d, h * dh), jnp.float32) * s,
+        "wi": jax.random.normal(ks[1], (d, h * dh), jnp.float32) * s,
+        "wf": jax.random.normal(ks[2], (d, h * dh), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (d, h * dh), jnp.float32) * s,
+        # recurrent block-diagonal mixing (per head)
+        "r": jax.random.normal(ks[4], (h, dh, dh), jnp.float32) * dh ** -0.5,
+        "w_out": jax.random.normal(ks[5], (h * dh, d), jnp.float32) * (h * dh) ** -0.5,
+    }
+
+
+def slstm_state(b: int, cfg: ModelConfig, dtype=jnp.float32):
+    h, dh = cfg.n_heads, cfg.dh
+    z = jnp.zeros((b, h, dh), dtype)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((b, h, dh), -1e30, dtype)}
+
+
+def _slstm_cell(p_r, state, zifo):
+    z_in, i_in, f_in, o_in = zifo                        # (B,H,dh) pre-activations
+    c, n, hid, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hde->bhe", hid, p_r)
+    z = jnp.tanh(z_in + rec)
+    o = jax.nn.sigmoid(o_in + rec)
+    logf = jax.nn.log_sigmoid(f_in + rec)
+    i_raw = i_in + rec
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    hid = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": hid, "m": m_new}, hid
+
+
+def slstm_seq(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.dh
+    dt = x.dtype
+    pre = [
+        (x @ p[w].astype(dt)).reshape(b, s, h, dh).astype(jnp.float32)
+        for w in ("wz", "wi", "wf", "wo")
+    ]
+    if state is None:
+        state = slstm_state(b, cfg)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in pre)
+    cell = lambda st, v: _slstm_cell(p["r"], st, v)  # noqa: E731
+    ch = 256
+    if s % ch == 0 and s > ch:
+        # time-chunked remat (see mamba_seq): bounds backward residuals
+        nck = s // ch
+        xs_c = tuple(v.reshape(nck, ch, *v.shape[1:]) for v in xs)
+        chunk = jax.checkpoint(
+            lambda st, inp: jax.lax.scan(cell, st, inp),
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+        state, hs = jax.lax.scan(chunk, state, xs_c)
+        hs = hs.reshape(s, *hs.shape[2:])
+    else:
+        state, hs = jax.lax.scan(cell, state, xs)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, h * dh).astype(dt)
+    return y @ p["w_out"].astype(dt), state
+
+
+def slstm_step(p: dict, x: jax.Array, cfg: ModelConfig, state):
+    y, state = slstm_seq(p, x[:, None, :], cfg, state)
+    return y[:, 0], state
+
+
+# ----------------------------------------------------------------------
+# Mamba-style selective SSM (S6) — the hymba parallel head
+# ----------------------------------------------------------------------
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = d            # inner dim of the parallel SSM path
+    n = cfg.ssm_state
+    r = max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * s,
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32) * 0.1,
+        "w_dt1": jax.random.normal(ks[2], (di, r), jnp.float32) * di ** -0.5,
+        "w_dt2": jax.random.normal(ks[3], (r, di), jnp.float32) * r ** -0.5,
+        "dt_bias": jnp.zeros(di),
+        "w_bc": jax.random.normal(ks[4], (di, 2 * n), jnp.float32) * di ** -0.5,
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones(di),
+        "w_out": jax.random.normal(ks[6], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def mamba_state(b: int, cfg: ModelConfig, dtype=jnp.float32):
+    di, n, kc = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((b, di, n), dtype),
+        "conv": jnp.zeros((b, kc - 1, di), dtype),   # trailing inputs for the conv
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prefix: jax.Array):
+    """Depthwise causal conv. x: (B,S,Di), w: (K,Di), prefix: (B,K-1,Di)."""
+    kc = w.shape[0]
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(kc))
+    new_prefix = xp[:, xp.shape[1] - (kc - 1) :, :] if kc > 1 else prefix
+    return out, new_prefix
+
+
+def mamba_seq(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    dt_ = x.dtype
+    if state is None:
+        state = mamba_state(b, cfg)
+    xz = x @ p["w_in"].astype(dt_)
+    x_in, z = jnp.split(xz, 2, axis=-1)                   # (B,S,Di) each
+    x_c, conv_state = _causal_conv(
+        x_in.astype(jnp.float32), p["conv"], state["conv"].astype(jnp.float32)
+    )
+    x_c = jax.nn.silu(x_c)
+    dt = jax.nn.softplus(x_c @ p["w_dt1"] @ p["w_dt2"] + p["dt_bias"])  # (B,S,Di)
+    bc = x_c @ p["w_bc"]                                  # (B,S,2N)
+    b_in, c_out = bc[..., :n], bc[..., n:]
+    a = -jnp.exp(p["a_log"])                              # (Di, N)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                             # (B,Di),(B,Di),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None] * a)                  # (B,Di,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = tuple(
+        jnp.moveaxis(v, 1, 0) for v in (x_c, dt, b_in, c_out)
+    )
+    # time-chunked remat: the backward otherwise stacks the (B, Di, N) state
+    # per step; chunk boundaries bound the saved residuals to S/CH states
+    ch = 256
+    if s % ch == 0 and s > ch:
+        nck = s // ch
+        xs_c = tuple(v.reshape(nck, ch, *v.shape[1:]) for v in xs)
+
+        def chunk(hc, inp_c):
+            return jax.lax.scan(step, hc, inp_c)
+
+        chunk = jax.checkpoint(chunk, policy=jax.checkpoint_policies.nothing_saveable)
+        h_final, ys = jax.lax.scan(chunk, state["h"].astype(jnp.float32), xs_c)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        h_final, ys = jax.lax.scan(step, state["h"].astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + p["d_skip"] * x_c        # (B,S,Di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = y @ p["w_out"].astype(dt_)
+    return out, {"h": h_final, "conv": conv_state}
+
+
+def mamba_step(p: dict, x: jax.Array, cfg: ModelConfig, state):
+    y, state = mamba_seq(p, x[:, None, :], cfg, state)
+    return y[:, 0], state

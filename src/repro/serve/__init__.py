@@ -1,0 +1,4 @@
+from .engine import ServeEngine, Request
+from .retrieval import RetrievalAugmentedServer
+
+__all__ = ["ServeEngine", "Request", "RetrievalAugmentedServer"]

@@ -1,0 +1,58 @@
+"""RAG integration: the paper's filtered-ANN engine in the serving loop.
+
+This is where the two halves of the framework meet (DESIGN.md §4): the LM
+fleet produces query embeddings; each retrieval call is a *filtered* ANN
+query (e.g. "similar docs, but only year >= 2020") planned per-query by the
+learned planner.
+
+``RetrievalAugmentedServer`` wraps a small LM: it embeds the prompt (mean of
+final hidden states through the embedding projection), issues a filtered ANN
+query against the corpus, and (in a real system) would splice retrieved
+context into the prompt.  Here we return the retrieved ids alongside the
+generation so examples/benchmarks can check end-to-end behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import FilteredANNEngine
+from ..core.predicates import Predicate
+from ..models.model import Model
+
+__all__ = ["RetrievalAugmentedServer"]
+
+
+class RetrievalAugmentedServer:
+    def __init__(self, model: Model, params, ann: FilteredANNEngine,
+                 embed_dim: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.ann = ann
+        d_corpus = ann.vectors.shape[1]
+        key = jax.random.PRNGKey(0)
+        # projection from model space to corpus embedding space (in a real
+        # deployment this is the trained embedding head)
+        self.proj = jax.random.normal(
+            key, (model.cfg.d_model, d_corpus), jnp.float32
+        ) * model.cfg.d_model ** -0.5
+        self._embed = jax.jit(self._embed_fn)
+
+    def _embed_fn(self, params, tokens):
+        x, _ = self.model._hidden(params, {"tokens": tokens})
+        pooled = x.mean(axis=1).astype(jnp.float32)        # (B, D)
+        e = pooled @ self.proj
+        return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-6)
+
+    # ------------------------------------------------------------------
+    def retrieve(self, tokens: np.ndarray, pred: Predicate, k: int = 5):
+        """tokens: (B, S) -> list of PlannedResult per row."""
+        q = np.asarray(self._embed(self.params, jnp.asarray(tokens)))
+        # scale query into corpus space (corpus vectors are not normalised)
+        scale = float(np.linalg.norm(self.ann.vectors, axis=1).mean())
+        q = q * scale
+        return [self.ann.query(q[i], pred, k) for i in range(q.shape[0])]

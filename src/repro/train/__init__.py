@@ -1,0 +1,9 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import TrainState, make_train_step, init_train_state
+from . import schedule
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "TrainState", "make_train_step", "init_train_state",
+    "schedule",
+]

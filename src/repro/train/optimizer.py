@@ -1,0 +1,66 @@
+"""AdamW in pure JAX (optax is unavailable offline).
+
+States are pytrees mirroring the params; everything fp32 (params are fp32
+masters, forward casts to bf16).  Supports global-norm clipping, decoupled
+weight decay, and linear-warmup + cosine schedules (in schedule.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(
+    params, grads, state: AdamWState, cfg: AdamWConfig, lr_scale: jax.Array
+) -> Tuple[Any, AdamWState, jax.Array]:
+    """One AdamW step.  Returns (new_params, new_state, grad_norm)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-16
+    )
+    scale = jnp.minimum(1.0, cfg.clip_norm / gnorm) if cfg.clip_norm > 0 else 1.0
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    m = jax.tree.map(lambda a, g: cfg.b1 * a + (1 - cfg.b1) * g, state.m, grads)
+    v = jax.tree.map(lambda a, g: cfg.b2 * a + (1 - cfg.b2) * g * g, state.v, grads)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, mm, vv):
+        mh = mm / b1c
+        vh = vv / b2c
+        return (
+            p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v), gnorm

@@ -1,0 +1,78 @@
+"""Training step: loss -> grads -> AdamW, with microbatch accumulation,
+remat (inside the model's layer scan), and mixed precision (fp32 masters,
+bf16 compute — the cast happens in the model's forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+from . import schedule as schedules
+
+__all__ = ["TrainState", "make_train_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    schedule: Callable = schedules.warmup_cosine,
+    grad_accum: int = 1,
+):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``grad_accum > 1`` splits the batch into microbatches along axis 0 and
+    accumulates grads in fp32 via lax.scan (constant memory in #microbatches).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mb)
+                return (
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g),
+                    l_acc + l,
+                ), None
+
+            mbs = jax.tree.map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum, *a.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+        lr_scale = schedule(state.opt.step)
+        params, opt, gnorm = adamw_update(state.params, grads, state.opt, opt_cfg, lr_scale)
+        out = {"loss": loss, "grad_norm": gnorm, "lr_scale": lr_scale}
+        out.update({k: v for k, v in (metrics or {}).items()})
+        return TrainState(params=params, opt=opt), out
+
+    return train_step

@@ -1,0 +1,86 @@
+"""Checkpointing: round-trip, atomicity, retention, async, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(0, 1, (8, 4)).astype(np.float32)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+    }
+
+
+def test_round_trip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(3, t)
+    out = ck.restore(3, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, _tree(s))
+    assert ck.latest_step() == 4
+    assert ck.steps() == [3, 4]  # keep=2
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(7, _tree())
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_atomic_no_torn_checkpoint(tmp_path):
+    """A leftover .tmp directory must never be listed as a checkpoint."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert ck.steps() == [1]
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ck.restore(1, {"a": jax.ShapeDtypeStruct((3,), jnp.float32),
+                       "b": jax.ShapeDtypeStruct((2,), jnp.float32)})
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    """Save under one mesh sharding, restore under another (elastic)."""
+    from repro.dist.elastic import replan_mesh
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    n = len(jax.devices())
+    ck = Checkpointer(str(tmp_path))
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, t)
+
+    shape, axes = replan_mesh(n, model_parallel=1)
+    mesh = jax.make_mesh(shape, axes)
+    shardings = {"w": NamedSharding(mesh, P(None, None))}
+    out = ck.restore(1, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t),
+                     shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+
+
+def test_replan_mesh_shapes():
+    from repro.dist.elastic import replan_mesh
+
+    assert replan_mesh(512, 16) == ((32, 16), ("data", "model"))
+    assert replan_mesh(480, 16) == ((30, 16), ("data", "model"))  # lost a host
+    shape, axes = replan_mesh(512, 16, multi_pod=True)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    with pytest.raises(ValueError):
+        replan_mesh(8, 16)

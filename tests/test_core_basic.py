@@ -1,0 +1,101 @@
+"""Fast unit tests for the core paper components."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DatasetStats,
+    GradientBoostingRegressor,
+    LabelEq,
+    Predicate,
+    RangePred,
+    SelectivityEstimator,
+)
+from repro.core.stats import Histogram
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    ds = make_dataset("arxiv", scale="4000", seed=1)
+    stats = DatasetStats.build(ds.vectors, ds.cat, ds.num, sample_frac=0.05, seed=0)
+    return ds, stats
+
+
+def test_predicate_eval_shapes(tiny):
+    ds, _ = tiny
+    p = Predicate(labels=(LabelEq(0, 0),))
+    m = p.eval(ds.cat, ds.num)
+    assert m.shape == (ds.n,) and m.dtype == bool
+
+
+def test_single_label_selectivity_exact(tiny):
+    ds, stats = tiny
+    for code in range(3):
+        p = Predicate(labels=(LabelEq(0, code),))
+        true = p.selectivity(ds.cat, ds.num)
+        est = SelectivityEstimator(stats).estimate(p)
+        assert abs(est - true) < 1e-9, "single-label lookup must be exact"
+
+
+def test_pair_label_selectivity_exact(tiny):
+    ds, stats = tiny
+    p = Predicate(labels=(LabelEq(0, 0), LabelEq(1, 0)))
+    true = p.selectivity(ds.cat, ds.num)
+    est = SelectivityEstimator(stats).estimate(p)
+    assert abs(est - true) < 1e-9, "two-label co-occurrence lookup must be exact"
+
+
+def test_histogram_range_selectivity(tiny):
+    ds, stats = tiny
+    x = ds.num[:, 0]
+    lo, hi = float(np.quantile(x, 0.3)), float(np.quantile(x, 0.5))
+    p = Predicate(ranges=(RangePred(0, ((lo, hi),)),))
+    true = p.selectivity(ds.cat, ds.num)
+    est = SelectivityEstimator(stats).estimate(p)
+    assert abs(est - true) < 0.02, f"hist est {est} vs true {true}"
+
+
+def test_histogram_partial_bins():
+    x = np.linspace(0.0, 1.0, 10_001)
+    h = Histogram.build(x, bins=16)
+    # a range covering exactly 1.5 bins starting mid-bin
+    sel = h.selectivity([(1.0 / 32, 1.0 / 32 + 3.0 / 32)])
+    assert abs(sel - 3.0 / 32) < 5e-3
+
+
+def test_multi_range_union(tiny):
+    ds, stats = tiny
+    x = ds.num[:, 0]
+    q = np.quantile(x, [0.1, 0.2, 0.6, 0.7])
+    p = Predicate(ranges=(RangePred(0, ((float(q[0]), float(q[1])), (float(q[2]), float(q[3])))),))
+    true = p.selectivity(ds.cat, ds.num)
+    est = SelectivityEstimator(stats).estimate(p)
+    assert abs(est - true) < 0.03
+
+
+def test_gbm_learns_nonlinear():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, size=(800, 3))
+    y = x[:, 0] ** 2 + 0.5 * np.sin(3 * x[:, 1]) - 0.3 * x[:, 2]
+    m = GradientBoostingRegressor(n_estimators=150).fit(x, y)
+    pred = m.predict(x)
+    mse = float(((pred - y) ** 2).mean())
+    assert mse < 0.02, f"GBM underfit: mse={mse}"
+
+
+def test_mixed_estimator_with_gbm(tiny):
+    ds, stats = tiny
+    qs, preds, sels = gen_queries(
+        ds.vectors, ds.cat, ds.num, 120, kinds=("mixed", "label"), seed=3
+    )
+    est = SelectivityEstimator(stats).fit(preds[:100], sels[:100])
+    errs = [abs(est.estimate(p) - s) for p, s in zip(preds[100:], sels[100:])]
+    assert float(np.mean(errs)) < 0.08, f"mean abs err {np.mean(errs)}"
+
+
+def test_pmi_sign(tiny):
+    _, stats = tiny
+    # PMI of a label with itself is strongly positive (P(x,x)=P(x) > P(x)^2)
+    lbl = int(np.argmax(stats.label_freq))
+    assert stats.pmi(lbl, lbl) > 0

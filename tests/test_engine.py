@@ -1,0 +1,82 @@
+"""End-to-end engine tests: plan + execute, planner training, utility labels."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    FilteredANNEngine,
+    POST_FILTER,
+    PRE_FILTER,
+    recall_at_k,
+)
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def engine():
+    ds = make_dataset("sift", scale="8000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num, EngineConfig(n_lists=64, seed=0)
+    ).build()
+    tq, tp, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 60, kinds=("range", "mixed"), seed=1
+    )
+    eng.fit(tq, tp, k=10)
+    return ds, eng
+
+
+def test_engine_builds(engine):
+    _, eng = engine
+    assert eng.ivf.built and eng.planner.params is not None
+
+
+def test_query_recall(engine):
+    ds, eng = engine
+    qs, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, 20, kinds=("range",), seed=7)
+    recs = []
+    for i, p in enumerate(preds):
+        res = eng.query(qs[i], p, k=10)
+        truth = eng.ground_truth(qs[i], p, k=10)
+        recs.append(recall_at_k(res.result.ids, truth))
+    assert float(np.mean(recs)) >= 0.9, f"planned recall {np.mean(recs)}"
+
+
+def test_decisions_vary_with_selectivity(engine):
+    """Planner should not be a constant function across the selectivity range
+    (unless one strategy dominates everywhere, which the fixture avoids)."""
+    ds, eng = engine
+    qs, preds, sels = gen_queries(
+        ds.vectors, ds.cat, ds.num, 30, kinds=("range",), sel_range=(0.005, 0.4), seed=9
+    )
+    decisions = [eng.query(qs[i], p, k=10).decision for i, p in enumerate(preds)]
+    assert set(decisions) <= {PRE_FILTER, POST_FILTER}
+
+
+def test_post_filter_expansion_fills_k(engine):
+    ds, eng = engine
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 5, kinds=("range",), sel_range=(0.02, 0.05), seed=11
+    )
+    for i, p in enumerate(preds):
+        res = eng.post_exec.search(qs[i : i + 1], p, k=10)
+        n_valid = (res.ids >= 0).sum()
+        assert n_valid == 10, f"post-filter returned {n_valid} < k despite expansion"
+
+
+def test_pre_filter_is_exact(engine):
+    ds, eng = engine
+    qs, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, 5, kinds=("range",), seed=13)
+    for i, p in enumerate(preds):
+        res = eng.pre_exec.search(qs[i : i + 1], p, k=10)
+        truth = eng.ground_truth(qs[i], p, k=10)
+        assert recall_at_k(res.ids, truth) == 1.0
+
+
+def test_plan_overhead_small(engine):
+    ds, eng = engine
+    qs, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, 3, kinds=("range",), seed=17)
+    r = eng.query(qs[0], preds[0], k=10)
+    # paper claims "minimal inference overhead": planning must be a small
+    # fraction of total end-to-end time on any non-trivial corpus
+    assert r.plan_overhead < 0.05

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_len, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_len, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss NaN/inf"
+    logits, _ = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_grad_step(arch):
+    """One gradient step: finite grads, params change."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, f"{arch}: bad grad norm"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill must reproduce teacher-forced logits."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    tokens = batch["tokens"]
+    prefix = cfg.frontend_len if cfg.family == "vlm" else 0
+    max_len = S + prefix + 8
+
+    # teacher-forced full forward
+    tf_logits, _ = model.forward(params, batch)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = tokens[:, : S - 1]
+    logits_pre, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len)
+    )(params, pre_batch)
+    # prefill's last-position logits == teacher-forced logits at S-2
+    np.testing.assert_allclose(
+        np.asarray(logits_pre),
+        np.asarray(tf_logits[:, S - 2]),
+        rtol=2e-2, atol=2e-2,
+    )
+
+    lengths = jnp.full((B,), S - 1 + prefix, jnp.int32)
+    logits_dec, cache = jax.jit(model.decode_step)(
+        params, cache, tokens[:, S - 1], lengths
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec),
+        np.asarray(tf_logits[:, S - 1]),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_param_counts_match_formula():
+    """n_params() formula should be within 15% of the real param count on
+    reduced configs (it drives MODEL_FLOPS in the roofline)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        real = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        approx = cfg.n_params()
+        assert 0.5 < approx / real < 2.0, f"{arch}: formula {approx} vs real {real}"

@@ -1,0 +1,63 @@
+"""Core-planner MLP tests: learnability, determinism, ROC-AUC helper."""
+import numpy as np
+
+from repro.core.planner import CorePlanner, roc_auc
+
+
+def _toy_problem(n=600, seed=0):
+    """Synthetic planner problem: decision boundary is a nonlinear function
+    of 'selectivity' and 'corpus size' features (like the real trade-off)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, size=(n, 9)).astype(np.float32)
+    sel, logn = x[:, 3], x[:, 0]
+    y = ((sel + 0.3 * logn + 0.1 * np.sin(3 * sel)) > 0).astype(np.int32)
+    return x, y
+
+
+def test_roc_auc_perfect():
+    y = np.array([0, 0, 1, 1])
+    s = np.array([0.1, 0.2, 0.8, 0.9])
+    assert roc_auc(y, s) == 1.0
+
+
+def test_roc_auc_random():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 2, 2000)
+    s = rng.random(2000)
+    assert abs(roc_auc(y, s) - 0.5) < 0.05
+
+
+def test_roc_auc_with_ties():
+    y = np.array([0, 1, 0, 1])
+    s = np.array([0.5, 0.5, 0.5, 0.5])
+    assert abs(roc_auc(y, s) - 0.5) < 1e-9
+
+
+def test_planner_learns():
+    x, y = _toy_problem()
+    p = CorePlanner(n_features=9, seed=0).fit(x, y)
+    acc = (p.decide(x) == y).mean()
+    assert acc > 0.9, f"planner train acc {acc}"
+
+
+def test_planner_generalises():
+    x, y = _toy_problem(800, seed=1)
+    xt, yt = x[:600], y[:600]
+    xv, yv = x[600:], y[600:]
+    p = CorePlanner(n_features=9, seed=0).fit(xt, yt)
+    auc = roc_auc(yv, p.predict_proba(xv))
+    assert auc > 0.9, f"val AUC {auc}"
+
+
+def test_planner_deterministic():
+    x, y = _toy_problem(300)
+    p1 = CorePlanner(seed=42).fit(x, y)
+    p2 = CorePlanner(seed=42).fit(x, y)
+    np.testing.assert_allclose(p1.predict_proba(x), p2.predict_proba(x), atol=1e-5)
+
+
+def test_planner_proba_range():
+    x, y = _toy_problem(300)
+    p = CorePlanner(seed=0).fit(x, y)
+    proba = p.predict_proba(x)
+    assert (proba >= 0).all() and (proba <= 1).all()

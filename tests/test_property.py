@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DatasetStats, LabelEq, Predicate, RangePred, SelectivityEstimator
+from repro.core.stats import Histogram
+from repro.index.flat import l2_topk
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# histogram invariants
+# ----------------------------------------------------------------------
+@given(
+    data=st.lists(st.floats(-100, 100, allow_nan=False), min_size=16, max_size=400),
+    lo=st.floats(-120, 120, allow_nan=False),
+    width=st.floats(0.0, 250, allow_nan=False),
+)
+@settings(max_examples=60, deadline=None)
+def test_histogram_selectivity_bounds(data, lo, width):
+    h = Histogram.build(np.asarray(data), bins=64)
+    s = h.selectivity([(lo, lo + width)])
+    assert -1e-9 <= s <= 1.0 + 1e-9
+
+
+@given(
+    data=st.lists(st.floats(-50, 50, allow_nan=False), min_size=32, max_size=300),
+)
+@settings(max_examples=40, deadline=None)
+def test_histogram_full_range_is_one(data):
+    x = np.asarray(data)
+    h = Histogram.build(x, bins=32)
+    s = h.selectivity([(h.lo - 1, h.hi + 1)])
+    assert abs(s - 1.0) < 1e-6
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    a=st.floats(0, 1), b=st.floats(0, 1), c=st.floats(0, 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_histogram_monotone_in_range(seed, a, b, c):
+    """Wider range ⊇ narrower range ⇒ selectivity is monotone."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 10, 500)
+    h = Histogram.build(x, bins=64)
+    pts = sorted([h.lo + (h.hi - h.lo) * t for t in (a, b, c)])
+    narrow = h.selectivity([(pts[1], pts[2])])
+    wide = h.selectivity([(pts[0], pts[2])])
+    assert wide >= narrow - 1e-9
+
+
+# ----------------------------------------------------------------------
+# selectivity-estimator invariants
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_estimates_in_unit_interval(seed):
+    rng = np.random.default_rng(seed)
+    n = 400
+    vec = rng.normal(0, 1, (n, 8)).astype(np.float32)
+    cat = rng.integers(0, 5, (n, 2)).astype(np.int32)
+    num = rng.normal(0, 1, (n, 2)).astype(np.float32)
+    stats = DatasetStats.build(vec, cat, num, sample_frac=0.05)
+    est = SelectivityEstimator(stats)
+    preds = [
+        Predicate(labels=(LabelEq(0, 1),)),
+        Predicate(labels=(LabelEq(0, 1), LabelEq(1, 2))),
+        Predicate(ranges=(RangePred(0, ((-0.5, 0.5),)),)),
+        Predicate(labels=(LabelEq(0, 0),), ranges=(RangePred(1, ((0.0, 2.0),)),)),
+    ]
+    for p in preds:
+        s = est.estimate(p)
+        assert 0.0 <= s <= 1.0
+
+
+# ----------------------------------------------------------------------
+# top-k invariants
+# ----------------------------------------------------------------------
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(20, 200),
+    k=st.integers(1, 10),
+)
+@settings(max_examples=30, deadline=None)
+def test_topk_sorted_and_exact(seed, n, k):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, 6)).astype(np.float32)
+    q = rng.normal(0, 1, (2, 6)).astype(np.float32)
+    d, i = l2_topk(jnp.asarray(q), jnp.asarray(x), k)
+    d, i = np.asarray(d), np.asarray(i)
+    assert (np.diff(d, axis=1) >= -1e-5).all(), "distances must be sorted"
+    ref = np.sort(((q[:, None] - x[None]) ** 2).sum(-1), axis=1)[:, :k]
+    np.testing.assert_allclose(d, ref, rtol=1e-3, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000), frac=st.floats(0.05, 0.9))
+@settings(max_examples=30, deadline=None)
+def test_topk_respects_mask(seed, frac):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (100, 4)).astype(np.float32)
+    q = rng.normal(0, 1, (1, 4)).astype(np.float32)
+    mask = rng.random(100) < frac
+    _, i = l2_topk(jnp.asarray(q), jnp.asarray(x), 5, jnp.asarray(mask))
+    i = np.asarray(i)[0]
+    for idx in i:
+        assert idx == -1 or mask[idx]
+
+
+# ----------------------------------------------------------------------
+# predicate-eval invariants
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_conjunction_is_intersection(seed):
+    rng = np.random.default_rng(seed)
+    n = 300
+    cat = rng.integers(0, 4, (n, 2)).astype(np.int32)
+    num = rng.normal(0, 1, (n, 1)).astype(np.float32)
+    p1 = Predicate(labels=(LabelEq(0, 1),))
+    p2 = Predicate(ranges=(RangePred(0, ((-0.3, 0.8),)),))
+    both = Predicate(labels=p1.labels, ranges=p2.ranges)
+    m = both.eval(cat, num)
+    np.testing.assert_array_equal(m, p1.eval(cat, num) & p2.eval(cat, num))

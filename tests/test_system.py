@@ -1,0 +1,92 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's headline claim, miniaturised: a learned per-query planner over
+pre-/post-filtering executors achieves >= 90% recall while being no slower
+than always picking one fixed strategy — and the whole pipeline
+(stats -> estimator -> planner -> executor) holds together end to end.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, FilteredANNEngine, recall_at_k
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def system():
+    ds = make_dataset("arxiv", scale="12000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num, EngineConfig(seed=0)
+    ).build()
+    tq, tp, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 50, kinds=ds.filter_kinds, seed=1
+    )
+    eng.fit(tq, tp, k=10)
+    return ds, eng
+
+
+def test_end_to_end_recall_at_90(system):
+    """Paper claim: >= 90% recall with the learned planner."""
+    ds, eng = system
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 25, kinds=ds.filter_kinds, seed=5
+    )
+    recalls, times = [], []
+    for i, p in enumerate(preds):
+        out = eng.query(qs[i], p, k=10)
+        truth = eng.ground_truth(qs[i], p, k=10)
+        recalls.append(recall_at_k(out.result.ids, truth))
+        times.append(out.result.elapsed)
+    assert float(np.mean(recalls)) >= 0.9, f"recall {np.mean(recalls)}"
+
+
+def test_planner_picks_measured_winner(system):
+    """The paper's mechanism, stated contention-robustly: per query, the
+    planner should select the strategy that a same-run measurement shows to
+    be faster (at matched recall).  Wall-time *sums* are too noisy for CI
+    (pre/post differ 5-100x per query, so the per-query winner is stable
+    even under load, but absolute times are not)."""
+    ds, eng = system
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 20, kinds=ds.filter_kinds,
+        sel_range=(0.01, 0.2), seed=9,
+    )
+    agree = total = 0
+    for i, p in enumerate(preds):
+        truth = eng.ground_truth(qs[i], p, k=10)
+        out = eng.query(qs[i], p, k=10)
+        r1 = eng.pre_exec.search(qs[i][None], p, 10)
+        r2 = eng.post_exec.search(
+            qs[i][None], p, 10, est_selectivity=out.est_selectivity
+        )
+        u1 = recall_at_k(r1.ids, truth) / max(r1.elapsed, 1e-7)
+        u2 = recall_at_k(r2.ids, truth) / max(r2.elapsed, 1e-7)
+        # only count queries where the winner is unambiguous (>=2x apart)
+        if max(u1, u2) >= 2 * min(u1, u2):
+            total += 1
+            winner = 0 if u1 >= u2 else 1
+            agree += int(out.decision == winner)
+    assert total >= 5, "workload degenerate — no clear winners to score"
+    assert agree / total >= 0.6, f"planner agreed on {agree}/{total} clear queries"
+
+
+def test_results_always_satisfy_predicate(system):
+    ds, eng = system
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 10, kinds=ds.filter_kinds, seed=13
+    )
+    for i, p in enumerate(preds):
+        out = eng.query(qs[i], p, k=10)
+        ids = out.result.ids[0]
+        ids = ids[ids >= 0]
+        assert p.eval(ds.cat[ids], ds.num[ids]).all(), "filter violated"
+
+
+def test_estimates_track_truth(system):
+    ds, eng = system
+    qs, preds, sels = gen_queries(
+        ds.vectors, ds.cat, ds.num, 20, kinds=ds.filter_kinds, seed=17
+    )
+    errs = [abs(eng.estimator.estimate(p) - s) for p, s in zip(preds, sels)]
+    assert float(np.mean(errs)) < 0.05
