@@ -3,7 +3,7 @@ from .stats import DatasetStats
 from .selectivity import SelectivityEstimator
 from .planner import CorePlanner, PlannerFeatures, PRE_FILTER, POST_FILTER
 from .executors import PreFilterExec, PostFilterExec, AcornExec, SearchResult, recall_at_k
-from .engine import FilteredANNEngine, EngineConfig, PlannedResult
+from .engine import FilteredANNEngine, EngineConfig, PlannedResult, CorpusShard
 from .trainer import gen_queries, gen_predicate
 from .gbm import GradientBoostingRegressor
 
@@ -12,7 +12,7 @@ __all__ = [
     "DatasetStats", "SelectivityEstimator",
     "CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER",
     "PreFilterExec", "PostFilterExec", "AcornExec", "SearchResult", "recall_at_k",
-    "FilteredANNEngine", "EngineConfig", "PlannedResult",
+    "FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard",
     "gen_queries", "gen_predicate",
     "GradientBoostingRegressor",
 ]

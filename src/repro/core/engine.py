@@ -21,7 +21,7 @@ from .predicates import Predicate
 from .selectivity import SelectivityEstimator
 from .stats import DatasetStats
 
-__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult"]
+__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard"]
 
 
 @dataclasses.dataclass
@@ -42,6 +42,38 @@ class PlannedResult:
     plan_overhead: float               # seconds spent estimating + deciding
 
 
+@dataclasses.dataclass
+class CorpusShard:
+    """One partition of the corpus with its own pre-/post-filter executors.
+
+    Produced by :meth:`FilteredANNEngine.shard_corpus`.  Executors operate
+    on shard-local row numbers; :meth:`search` maps results back to global
+    ids so shard outputs merge directly (``repro.dist.collectives.merge_topk``).
+    """
+
+    shard_id: int
+    ids: np.ndarray                    # (n_local,) global row ids
+    pre_exec: PreFilterExec
+    post_exec: PostFilterExec
+
+    def search(
+        self,
+        q: np.ndarray,
+        pred: Predicate,
+        k: int,
+        decision: int,
+        est_selectivity: Optional[float] = None,
+    ) -> SearchResult:
+        """Run the planned executor on this shard; returns GLOBAL ids."""
+        if decision == PRE_FILTER:
+            res = self.pre_exec.search(q, pred, k)
+        else:
+            res = self.post_exec.search(q, pred, k, est_selectivity=est_selectivity)
+        valid = res.ids >= 0
+        res.ids = np.where(valid, self.ids[np.maximum(res.ids, 0)], -1).astype(np.int32)
+        return res
+
+
 class FilteredANNEngine:
     def __init__(
         self,
@@ -56,19 +88,32 @@ class FilteredANNEngine:
         self.build_time_: dict = {}
 
     # ------------------------------------------------------------------
-    def build(self) -> "FilteredANNEngine":
-        """Offline phase: statistics + global index (paper Table 2 costs)."""
+    def build_stats(self) -> "FilteredANNEngine":
+        """Planning-only build: statistics, estimator, planner, features.
+
+        Skips the global IVF index, local executors, and jit warmup — all
+        a sharded deployment pays for but never uses (every query runs on
+        per-shard executors from :meth:`shard_corpus`).  Enough for
+        :meth:`plan` and :meth:`shard_corpus`; :meth:`fit` and the
+        unsharded :meth:`query` need the full :meth:`build`.
+        """
         t0 = time.perf_counter()
         self.stats = DatasetStats.build(
             self.vectors, self.cat, self.num,
             sample_frac=self.config.sample_frac, seed=self.config.seed,
         )
-        t1 = time.perf_counter()
-        self.ivf = IVFIndex(self.vectors, self.config.n_lists, seed=self.config.seed).build()
-        t2 = time.perf_counter()
         self.estimator = SelectivityEstimator(self.stats)
         self.planner = CorePlanner(seed=self.config.seed)
         self.feat = PlannerFeatures(self.stats)
+        self.build_time_["stats"] = time.perf_counter() - t0
+        return self
+
+    def build(self) -> "FilteredANNEngine":
+        """Offline phase: statistics + global index (paper Table 2 costs)."""
+        self.build_stats()
+        t1 = time.perf_counter()
+        self.ivf = IVFIndex(self.vectors, self.config.n_lists, seed=self.config.seed).build()
+        t2 = time.perf_counter()
         self.pre_exec = PreFilterExec(self.vectors, self.cat, self.num)
         self.post_exec = PostFilterExec(
             self.ivf, self.cat, self.num,
@@ -80,7 +125,7 @@ class FilteredANNEngine:
         # the query
         self._warm_buckets(self.config.default_k)
         t3 = time.perf_counter()
-        self.build_time_ = {"stats": t1 - t0, "ivf": t2 - t1, "warmup": t3 - t2}
+        self.build_time_.update({"ivf": t2 - t1, "warmup": t3 - t2})
         return self
 
     def _warm_buckets(self, k: int):
@@ -141,16 +186,60 @@ class FilteredANNEngine:
         return self
 
     # ------------------------------------------------------------------
-    def query(self, q: np.ndarray, pred: Predicate, k: int = 10) -> PlannedResult:
-        """Plan + execute one filtered ANN query."""
-        q = np.atleast_2d(q)
+    def plan(self, pred: Predicate, k: int = 10) -> Tuple[float, int, float]:
+        """Estimate selectivity + pick a strategy, without executing.
+
+        Returns ``(est_selectivity, decision, plan_overhead_s)``.  The plan
+        depends only on predicate and dataset statistics — not on which
+        corpus rows are local — so a sharded deployment plans ONCE and
+        broadcasts the decision to every shard (serve.ShardedANNEngine).
+        """
         t0 = time.perf_counter()
         est = self.estimator.estimate(pred)
         fv = self.feat.vector(pred, est, k)
         decision = int(self.planner.decide(fv)[0]) if self.planner.params else (
             PRE_FILTER if est < 0.05 else POST_FILTER
         )
-        plan_overhead = time.perf_counter() - t0
+        return est, decision, time.perf_counter() - t0
+
+    def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:
+        """Partition the corpus into ``n_shards`` contiguous shards, each with
+        its own pre-filter executor and post-filter IVF index.
+
+        This is the hook the distribution layer builds on: shards map 1:1
+        onto data-axis hosts, every shard answers the same planned query
+        over its rows, and the per-shard top-k results merge exactly
+        (``repro.dist.collectives.merge_topk``).  Per-shard IVF lists
+        default to sqrt(n_local) as in the global build, clamped to the
+        shard's row count; empty shards (more shards than rows) are
+        dropped rather than built.
+        """
+        assert n_shards >= 1
+        parts = np.array_split(np.arange(self.vectors.shape[0]), n_shards)
+        shards = []
+        for s, ids in enumerate(parts):
+            if ids.size == 0:
+                continue
+            v = np.ascontiguousarray(self.vectors[ids])
+            c, m = self.cat[ids], self.num[ids]
+            lists = min(n_lists or max(1, int(np.sqrt(ids.size))), ids.size)
+            ivf = IVFIndex(v, lists, seed=self.config.seed + s).build()
+            shards.append(CorpusShard(
+                shard_id=s,
+                ids=ids,
+                pre_exec=PreFilterExec(v, c, m),
+                post_exec=PostFilterExec(
+                    ivf, c, m,
+                    alpha0=self.config.alpha0, nprobe0=self.config.nprobe0,
+                ),
+            ))
+        return shards
+
+    # ------------------------------------------------------------------
+    def query(self, q: np.ndarray, pred: Predicate, k: int = 10) -> PlannedResult:
+        """Plan + execute one filtered ANN query."""
+        q = np.atleast_2d(q)
+        est, decision, plan_overhead = self.plan(pred, k)
         if decision == PRE_FILTER:
             res = self.pre_exec.search(q, pred, k)
         else:

@@ -1,0 +1,122 @@
+"""Compressed cross-shard collectives (int8 allreduce + top-k merge).
+
+Gradient allreduce dominates step time once the mesh spans hosts, and the
+payload is the full parameter footprint per step.  ``compressed_psum``
+cuts the wire bytes ~4x by quantising each shard to int8 with one fp32
+scale per shard before the collective:
+
+    scale_i = max|x_i| / 127          (per shard i)
+    q_i     = round(x_i / scale_i)    in [-127, 127], int8
+    mean    = (1/n) * sum_i q_i * scale_i
+
+The wire format is the int8 payload plus one scalar per shard (a ring
+all-gather of int8 moves the same bytes as reduce-scatter + all-gather at
+int8; a raw psum cannot sum values carrying different scales).  Here the
+reduction is expressed as a ``psum`` of the locally *dequantised* payload
+— identical arithmetic, and it lets shard_map's replication checker infer
+the replicated output; a production kernel would move the int8 bytes.
+The result is the *mean* over the axis (the gradient convention), not the
+sum.
+
+Plain quantisation biases training: the per-step rounding error
+``e_i = x_i - q_i*scale_i`` (|e_i| <= scale_i/2) is lost each round.
+``psum_with_error_feedback`` carries it instead (Seide et al. 2014;
+Karimireddy et al. 2019 "EF-SGD"):
+
+    c_t   = g_t + e_{t-1}        # add residual before quantising
+    out_t = mean_i(Q(c_t))       # compressed reduce of the compensated grad
+    e_t   = c_t - Q(c_t)         # local residual, carried to t+1
+
+Telescoping: sum_t Q(c_t) = sum_t g_t + e_0 - e_T, so the accumulated
+update converges to the exact mean at O(scale/T) — quantisation error is
+deferred, never dropped, which is the property the optimizer needs.
+
+All entry points are ``jax.shard_map``-compatible: call them from inside
+a shard-mapped function with the mesh axis name.  ``merge_topk`` is the
+host-side counterpart used by the sharded ANN query path: each corpus
+shard returns its local top-k and the reduction is a concat + re-top-k
+(exact, associative — merging shard-local top-k's loses nothing because
+any global top-k element is in its own shard's top-k).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# jax<0.5 only ships shard_map under jax.experimental; alias the modern
+# ``jax.shard_map`` spelling and re-export it so code that imports
+# repro.dist never depends on jax-import order elsewhere in the process.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map
+
+    jax.shard_map = shard_map
+
+__all__ = ["compressed_psum", "psum_with_error_feedback", "merge_topk", "shard_map"]
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-shard int8 quantisation: (q, scale), x ~= q * scale."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _reduced_mean(q: jax.Array, scale: jax.Array, axis_name: str) -> jax.Array:
+    deq = q.astype(jnp.float32) * scale              # shard's int8 contribution
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return jax.lax.psum(deq, axis_name) / n
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-quantised allreduce-mean over ``axis_name``.
+
+    Error is bounded by the largest shard's quantisation step:
+    |out - mean| <= max_i(scale_i) / 2.  Use inside ``jax.shard_map``.
+    """
+    q, scale = _quantize_int8(x)
+    return _reduced_mean(q, scale, axis_name)
+
+
+def psum_with_error_feedback(
+    g: jax.Array, err: jax.Array, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Compressed allreduce-mean with a carried quantisation residual.
+
+    Returns ``(mean, new_err)``; feed ``new_err`` back on the next call so
+    repeated reductions converge to the exact mean (see module docstring).
+    The residual keeps a leading singleton shard axis so it round-trips
+    through ``shard_map`` with ``out_specs=P(axis)`` unchanged.
+    """
+    comp = g + err
+    q, scale = _quantize_int8(comp)
+    new_err = comp - q.astype(jnp.float32) * scale   # includes clip error
+    return _reduced_mean(q, scale, axis_name), new_err[None]
+
+
+def merge_topk(
+    dists: np.ndarray, ids: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge per-shard top-k results into a global top-k.
+
+    ``dists``/``ids``: (n_shards, B, k_i) with -1 ids / +inf dists padding
+    invalid slots (ids are already global).  Returns (B, k) sorted by
+    ascending distance, -1/inf padded — the same contract as
+    ``index.flat.l2_topk``.
+    """
+    d = np.concatenate(list(dists), axis=1).astype(np.float32)   # (B, sum k_i)
+    i = np.concatenate(list(ids), axis=1)
+    if d.shape[1] < k:                       # fewer candidates than k: pad
+        b, pad = d.shape[0], k - d.shape[1]
+        d = np.concatenate([d, np.full((b, pad), np.inf, np.float32)], axis=1)
+        i = np.concatenate([i, np.full((b, pad), -1, i.dtype)], axis=1)
+    d = np.where(i < 0, np.inf, d)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    rows = np.arange(d.shape[0])[:, None]
+    out_d, out_i = d[rows, order], i[rows, order]
+    out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)
+    return out_d, out_i

@@ -1,0 +1,190 @@
+"""Sharding rules: param path -> PartitionSpec (DESIGN.md §5).
+
+One rule table drives every layer family.  Naming convention (matches the
+param dicts built in ``models/model.py`` / ``models/layers.py``):
+
+* **column-parallel** (``wq``/``wk``/``wv``/``wi``/``w_gate``/``w_up``/
+  ``w_in``/``lm_head``): the *output* feature dim is sharded on the model
+  axis, the *input* dim carries the FSDP (data-axes) shard — so the matmul
+  ``x @ w`` needs no collective on its output and the weight is
+  all-gathered along data only.
+* **row-parallel** (``wo``/``w_down``/``w_out``): the *input* dim is
+  sharded on the model axis (consuming the column-parallel activation
+  shard directly), the output dim carries the FSDP shard; the matmul's
+  partial sums are reduced by the layer's psum.
+* **expert-parallel MoE** (same names, one extra leading expert dim): the
+  expert dim takes the model axis (each model shard owns ``E/n_model``
+  experts), the within-expert input dim takes the data axes, the output
+  dim is replicated.
+* **vocab-sharded embedding** (``embed``: ``(V, d)`` vocab on model;
+  ``lm_head``: ``(d, V)`` is column-parallel, which puts vocab on model
+  too — the two stay consistent under weight tying).
+* **everything else** (norm scales/biases, conv kernels, SSM state
+  projections we don't recognise) is replicated — small tensors where
+  collective latency would dominate any memory win.
+
+Leading *stacked-layer* dims (``layers/...`` params are vmapped over
+depth; xLSTM ``blocks/mlstm/...`` adds a second group-interleave dim) are
+never sharded: the layer scan indexes them sequentially.
+
+``param_spec`` is the pure rule (unit-testable, mesh-free);
+``param_sharding`` applies it to a whole param pytree on a concrete mesh
+with a divisibility guard — any dim the mesh can't split evenly falls
+back to replicated rather than erroring, so reduced/smoke configs run on
+any device count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_spec",
+    "param_sharding",
+    "batch_sharding",
+    "cache_sharding",
+    "data_axes",
+]
+
+# matmul weights by the convention above; anything else replicates
+_COLUMN_PARALLEL = {"wq", "wk", "wv", "wi", "w_gate", "w_up", "w_in", "lm_head"}
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+# subtrees whose leaves carry a leading stacked-layer dim (vmapped init)
+_STACKED_ROOTS = {"layers", "blocks", "enc_layers"}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes that are not the tensor-parallel axis ("model").
+
+    These jointly act as the FSDP/data-parallel dimension: batch sharding
+    and the weight-shard dim of the param rules both use the full tuple,
+    so a (pod, data, model) mesh shards over pod x data without any rule
+    knowing how many data-like axes exist.
+    """
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def param_spec(
+    path: str,
+    shape: Sequence[int],
+    data_axes: Tuple[str, ...],
+    model_axis: str,
+    layer_axis: int,
+) -> P:
+    """PartitionSpec for one parameter.
+
+    ``path`` is the "/"-joined tree path (only the final name is matched
+    against the rule table), ``layer_axis`` is the number of leading
+    stacked-layer dims to leave unsharded.
+    """
+    name = path.split("/")[-1]
+    lead = (None,) * layer_axis
+    rest = len(shape) - layer_axis
+
+    if name == "embed" and layer_axis == 0 and rest == 2:
+        return P(model_axis, None)                       # vocab-sharded
+    if name in _COLUMN_PARALLEL:
+        if rest == 2:
+            return P(*lead, data_axes, model_axis)
+        if rest == 3:                                    # MoE (E, in, out)
+            return P(*lead, model_axis, data_axes, None)
+    if name in _ROW_PARALLEL:
+        if rest == 2:
+            return P(*lead, model_axis, data_axes)
+        if rest == 3:                                    # MoE (E, in, out)
+            return P(*lead, model_axis, None, data_axes)
+    return P(*(None,) * len(shape))                      # replicated
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def _guard_divisible(mesh: Mesh, spec: P, shape: Sequence[int]) -> P:
+    """Replace any spec entry whose mesh extent doesn't divide the dim."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _layer_axis_for(path: str) -> int:
+    parts = path.split("/")
+    if not parts or parts[0] not in _STACKED_ROOTS:
+        return 0
+    # xLSTM interleave: blocks/mlstm/* is stacked (groups, every-1, ...)
+    if parts[0] == "blocks" and "mlstm" in parts[1:-1]:
+        return 2
+    return 1
+
+
+def param_sharding(mesh: Mesh, params: Any) -> Any:
+    """NamedSharding pytree for a param (or optimizer-moment) pytree."""
+    d_axes = data_axes(mesh)
+
+    def one(key_path, leaf):
+        path = _path_str(key_path)
+        spec = param_spec(path, leaf.shape, d_axes, "model", _layer_axis_for(path))
+        return NamedSharding(mesh, _guard_divisible(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_sharding(mesh: Mesh, batch: Any, global_batch: int) -> Any:
+    """Shard the leading batch dim over the data axes when it divides."""
+    d_axes = data_axes(mesh)
+    n_data = math.prod(mesh.shape[a] for a in d_axes)
+    ok = global_batch >= n_data and global_batch % n_data == 0
+
+    def one(leaf):
+        if ok and leaf.ndim >= 1 and leaf.shape[0] == global_batch:
+            return NamedSharding(mesh, P(d_axes, *(None,) * (leaf.ndim - 1)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch)
+
+
+def cache_sharding(mesh: Mesh, cache: Any, global_batch: int) -> Any:
+    """Decode-cache sharding: find the batch dim and shard it on data.
+
+    Cache leaves are stacked over layers/groups first (``(L, B, ...)``;
+    xLSTM mlstm states are ``(G, every-1, B, ...)``), so the batch dim is
+    the first *leading* dim equal to ``global_batch`` rather than axis 0.
+    Everything else (heads, positions, head_dim) is replicated — the
+    decode attention kernel reads its own layer slice locally.
+    """
+    d_axes = data_axes(mesh)
+    n_data = math.prod(mesh.shape[a] for a in d_axes)
+    ok = global_batch >= n_data and global_batch % n_data == 0
+
+    def one(leaf):
+        if ok:
+            for ax in range(min(3, leaf.ndim)):
+                if leaf.shape[ax] == global_batch:
+                    spec = [None] * leaf.ndim
+                    spec[ax] = d_axes
+                    return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, cache)

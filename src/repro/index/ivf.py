@@ -28,7 +28,9 @@ class IVFIndex:
     def __init__(self, vectors: np.ndarray, n_lists: Optional[int] = None, seed: int = 0):
         self.vectors_np = np.asarray(vectors, np.float32)
         self.n, self.dim = vectors.shape
-        self.n_lists = n_lists or max(16, int(np.sqrt(self.n)))
+        # clamp to the corpus size: kmeans cannot seed more centroids than
+        # points (tiny corpora/shards otherwise crash the build)
+        self.n_lists = min(n_lists or max(16, int(np.sqrt(self.n))), self.n)
         self.seed = seed
         self.built = False
 

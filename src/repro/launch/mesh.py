@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "partition_params"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,3 +28,16 @@ def make_local_mesh():
     """Degenerate mesh over however many devices exist (tests / examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def partition_params(mesh, params):
+    """NamedShardings for a param pytree on ``mesh``.
+
+    Thin entry point over ``repro.dist.sharding.param_spec`` rules so the
+    launch drivers have one partitioning call next to mesh construction
+    (imported lazily: building a mesh must stay importable before jax
+    device init — see module docstring).
+    """
+    from ..dist.sharding import param_sharding
+
+    return param_sharding(mesh, params)

@@ -1,4 +1,4 @@
-from .engine import ServeEngine, Request
+from .engine import ServeEngine, Request, ShardedANNEngine
 from .retrieval import RetrievalAugmentedServer
 
-__all__ = ["ServeEngine", "Request", "RetrievalAugmentedServer"]
+__all__ = ["ServeEngine", "Request", "ShardedANNEngine", "RetrievalAugmentedServer"]

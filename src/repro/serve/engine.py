@@ -1,10 +1,18 @@
-"""Batched serving engine with continuous-batching-lite.
+"""Batched serving engine with continuous-batching-lite + sharded ANN path.
 
 A fixed-size decode batch of slots; finished sequences are swapped for
 queued requests between steps (the decode step itself is one jit'd program,
 so slot replacement costs one host round-trip — the standard continuous
 batching trade-off).  Greedy sampling (argmax) keeps the examples
 deterministic; temperature sampling is a flag.
+
+``ShardedANNEngine`` is the serving-side face of the distribution layer
+(``repro.dist``): the filtered-ANN corpus is partitioned across the data
+axis via ``FilteredANNEngine.shard_corpus``, each shard runs the SAME
+planned strategy over its rows, and per-shard top-k results are merged
+exactly with ``repro.dist.collectives.merge_topk``.  Planning happens once
+per query (selectivity + strategy depend on dataset statistics, not on
+row placement), so plan overhead does not grow with the shard count.
 """
 from __future__ import annotations
 
@@ -17,9 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.engine import FilteredANNEngine, PlannedResult
+from ..core.executors import SearchResult
+from ..core.predicates import Predicate
+from ..dist.collectives import merge_topk
 from ..models.model import Model
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "ShardedANNEngine"]
 
 
 @dataclasses.dataclass
@@ -84,3 +96,47 @@ class ServeEngine:
                         r.done = True
         for r in batch:
             r.done = True
+
+
+class ShardedANNEngine:
+    """Sharded filtered-ANN query path: plan once, fan out, merge top-k.
+
+    Wraps a :class:`FilteredANNEngine` with at least ``build_stats()`` run
+    (a sharded deployment doesn't need the global index that ``build()``
+    additionally constructs; ``fit()`` for a trained planner does).  The
+    corpus is partitioned into ``n_shards`` contiguous shards (defaulting
+    to the device count — one shard per data-axis slot); each query is
+
+    1. planned centrally (selectivity estimate + pre/post decision),
+    2. executed on every shard with the decided strategy (both executor
+       kinds run per-shard via the ``shard_corpus`` hook),
+    3. merged: shard-local top-k lists concat + re-top-k, which is exact
+       because any global top-k element is in its own shard's top-k.
+    """
+
+    def __init__(self, engine: FilteredANNEngine, n_shards: Optional[int] = None,
+                 n_lists: Optional[int] = None):
+        self.engine = engine
+        self.n_shards = n_shards or max(1, len(jax.devices()))
+        self.shards = engine.shard_corpus(self.n_shards, n_lists=n_lists)
+
+    # ------------------------------------------------------------------
+    def query(self, q: np.ndarray, pred: Predicate, k: int = 10) -> PlannedResult:
+        q = np.atleast_2d(q)
+        est, decision, plan_overhead = self.engine.plan(pred, k)
+        t0 = time.perf_counter()
+        per_shard = [s.search(q, pred, k, decision, est) for s in self.shards]
+        d, i = merge_topk(
+            np.stack([r.dists for r in per_shard]),
+            np.stack([r.ids for r in per_shard]),
+            k,
+        )
+        elapsed = time.perf_counter() - t0 + plan_overhead
+        res = SearchResult(
+            d, i, elapsed, per_shard[0].strategy,
+            n_expansions=max(r.n_expansions for r in per_shard),
+        )
+        return PlannedResult(res, est, decision, plan_overhead)
+
+    def batch_query(self, queries: np.ndarray, preds, k: int = 10):
+        return [self.query(queries[i], preds[i], k) for i in range(len(preds))]

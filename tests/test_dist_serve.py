@@ -1,0 +1,98 @@
+"""Sharded ANN serving path: fan-out/merge exactness vs the unsharded engine."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, FilteredANNEngine, Predicate, RangePred
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+from repro.dist import merge_topk
+from repro.serve import ShardedANNEngine
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    ds = make_dataset("arxiv", scale="2000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num, EngineConfig(seed=0)
+    ).build()
+    tq, tp, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 8, kinds=ds.filter_kinds, seed=1
+    )
+    return ds, eng, tq, tp
+
+
+def test_merge_topk_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    b, n, k, n_shards = 5, 512, 10, 4
+    d_all = rng.normal(0, 1, (b, n)).astype(np.float32) ** 2
+    parts = np.array_split(np.arange(n), n_shards)
+    sd, si = [], []
+    rows = np.arange(b)[:, None]
+    for ids in parts:
+        order = np.argsort(d_all[:, ids], axis=1)[:, :k]
+        sd.append(d_all[:, ids][rows, order])
+        si.append(ids[order].astype(np.int32))
+    md, mi = merge_topk(np.stack(sd), np.stack(si), k)
+    np.testing.assert_allclose(md, np.sort(d_all, axis=1)[:, :k])
+    assert (mi >= 0).all()
+
+
+def test_merge_topk_padding():
+    # one shard fully padded, one with 2 valid of 3
+    d = np.array([[[1.0, np.inf, np.inf]], [[np.inf, 2.0, 3.0]]], np.float32)
+    i = np.array([[[7, -1, -1]], [[-1, 9, 11]]], np.int32)
+    md, mi = merge_topk(d, i, 4)
+    assert mi[0].tolist() == [7, 9, 11, -1]
+    assert md[0][:3].tolist() == [1.0, 2.0, 3.0] and np.isinf(md[0][3])
+    # k beyond the total candidate columns still returns (B, k), padded
+    md, mi = merge_topk(d, i, 10)
+    assert mi.shape == (1, 10) and md.shape == (1, 10)
+    assert mi[0].tolist() == [7, 9, 11] + [-1] * 7
+
+
+def test_sharded_matches_unsharded(small_system):
+    ds, eng, tq, tp = small_system
+    sharded = ShardedANNEngine(eng, n_shards=4)
+    for i in range(len(tp)):
+        r0 = eng.query(tq[i], tp[i], k=10)
+        r1 = sharded.query(tq[i], tp[i], k=10)
+        assert r0.decision == r1.decision
+        gt = set(eng.ground_truth(tq[i], tp[i], k=10)[0].tolist()) - {-1}
+        got = set(r1.result.ids[0].tolist()) - {-1}
+        if r0.decision == 0:
+            # PRE_FILTER is exact on both paths: must equal ground truth
+            assert got == set(r0.result.ids[0].tolist()) - {-1} == gt
+        else:
+            # POST_FILTER probes different candidate sets per shard, so the
+            # sets may legitimately differ from the unsharded path; require
+            # strong ground-truth recall rather than id equality
+            assert len(gt & got) >= 0.8 * len(gt)
+
+
+def test_sharded_results_satisfy_predicate(small_system):
+    ds, eng, tq, tp = small_system
+    sharded = ShardedANNEngine(eng, n_shards=3)
+    for i in range(len(tp)):
+        ids = sharded.query(tq[i], tp[i], k=10).result.ids
+        ids = ids[ids >= 0]
+        assert tp[i].eval(ds.cat[ids], ds.num[ids]).all()
+
+
+def test_sharded_empty_predicate_and_tiny_shards(small_system):
+    ds, eng, tq, tp = small_system
+    nothing = Predicate(labels=(), ranges=(RangePred(attr=0, intervals=((1e9, 2e9),)),))
+    sharded = ShardedANNEngine(eng, n_shards=2)
+    r = sharded.query(tq[0], nothing, k=5)
+    assert (r.result.ids == -1).all() and np.isinf(r.result.dists).all()
+    # more shards than rows must not crash shard construction (empty shards
+    # dropped, per-shard IVF lists clamped to the shard size); build_stats
+    # is the planning-only path sharded deployments use
+    few = FilteredANNEngine(
+        ds.vectors[:10], ds.cat[:10], ds.num[:10],
+        EngineConfig(seed=0, sample_frac=1.0),
+    ).build_stats()
+    tiny = ShardedANNEngine(few, n_shards=16)
+    assert 0 < len(tiny.shards) <= 10
+    assert sum(s.ids.size for s in tiny.shards) == 10
+    r = tiny.query(tq[0], tp[0], k=3)
+    assert r.result.ids.shape == (1, 3)

@@ -12,6 +12,8 @@ from repro.core import EngineConfig, FilteredANNEngine, recall_at_k
 from repro.core.trainer import gen_queries
 from repro.data import make_dataset
 
+pytestmark = pytest.mark.slow  # module-scoped engine build + fit (~minutes)
+
 
 @pytest.fixture(scope="module")
 def system():

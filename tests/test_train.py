@@ -70,6 +70,7 @@ def test_grad_accum_matches_full_batch():
     assert max(jax.tree.leaves(d)) < 5e-3
 
 
+@pytest.mark.slow
 def test_train_driver_end_to_end(tmp_path):
     from repro.launch.train import main
 
