@@ -1,0 +1,107 @@
+"""Batched vs per-query serving throughput (the tentpole measurement).
+
+For B in {1, 8, 64, 256}: run the same planned workload through the
+per-query loop (``query()`` B times) and the batched pipeline
+(``batch_query`` once), on both the flat and the sharded engine.  Reports
+wall time and QPS per batch size and verifies the batched path returns
+IDENTICAL ids and decisions to the per-query loop — the batched pipeline is
+an execution-grouping optimisation, not an approximation.
+
+The workload draws query vectors freely but cycles predicates from a pool
+of ``N_PREDS`` distinct filters — the predicate-reuse regime production
+batches exhibit (many users, few popular filters) and the one the batched
+pre-filter group's mask/kernel sharing is designed for.  Per-query results
+are workload-independent, so this only affects how much the batched path
+gets to share.
+
+Default fixture: 100k vectors (``REPRO_BENCH_SCALE=reduced``); override the
+scale with the usual env var.  Acceptance target: batched >= 2x per-query
+QPS at B=64.
+
+Run: PYTHONPATH=src python -m benchmarks.batch_bench
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+os.environ.setdefault("REPRO_BENCH_SCALE", "reduced")   # 100k-vector fixture
+
+from repro.serve import ShardedANNEngine
+
+from .common import K, eval_queries, get_fixture
+
+BATCH_SIZES = (1, 8, 64, 256)
+DATASET = "sift"
+N_PREDS = 16    # distinct predicates in the workload pool
+
+
+def _check_exact(batched, singles, label):
+    for i, (bq, sq) in enumerate(zip(batched, singles)):
+        assert bq.decision == sq.decision, f"{label} row {i}: decision forked"
+        assert np.array_equal(bq.result.ids, sq.result.ids), (
+            f"{label} row {i}: batched ids differ from per-query ids"
+        )
+
+
+def _bench(engine, qs, preds, label):
+    rows = []
+    for b in BATCH_SIZES:
+        reps = max(1, 256 // b)
+        q = qs[np.arange(b) % qs.shape[0]]
+        p = [preds[i % N_PREDS] for i in range(b)]
+        # warm both paths (jit shapes) before timing
+        singles = [engine.query(q[i], p[i], K) for i in range(b)]
+        batched = engine.batch_query(q, p, K)
+        _check_exact(batched, singles, f"{label} B={b}")
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for i in range(b):
+                engine.query(q[i], p[i], K)
+        t_loop = (time.perf_counter() - t0) / reps
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            engine.batch_query(q, p, K)
+        t_batch = (time.perf_counter() - t0) / reps
+
+        rows.append({
+            "engine": label, "B": b,
+            "per_query_s": round(t_loop, 5), "batched_s": round(t_batch, 5),
+            "per_query_qps": round(b / t_loop, 1),
+            "batched_qps": round(b / t_batch, 1),
+            "speedup": round(t_loop / t_batch, 2),
+        })
+    return rows
+
+
+def run():
+    ds, eng, _, timings = get_fixture(DATASET)
+    print(f"# fixture: {DATASET} n={ds.vectors.shape[0]} "
+          f"build={timings['build']:.1f}s fit={timings['fit']:.1f}s")
+    qs, all_preds, _ = eval_queries(ds, n=64, sel_range=(0.01, 0.4), seed=7)
+    preds = all_preds[:N_PREDS]
+    _, decs, _ = eng.plan_batch(preds, K)
+    print(f"# predicate pool: {N_PREDS} distinct "
+          f"({int((decs == 0).sum())} pre / {int((decs == 1).sum())} post)")
+
+    rows = _bench(eng, qs, preds, "flat")
+    rows += _bench(ShardedANNEngine(eng, n_shards=4), qs, preds, "sharded")
+
+    hdr = list(rows[0])
+    print(" | ".join(f"{h:>13}" for h in hdr))
+    for r in rows:
+        print(" | ".join(f"{str(r[h]):>13}" for h in hdr))
+
+    at64 = next(r for r in rows if r["engine"] == "flat" and r["B"] == 64)
+    ok = at64["speedup"] >= 2.0
+    print(f"\nB=64 flat speedup: {at64['speedup']}x "
+          f"({'PASS' if ok else 'FAIL'}: target >= 2x)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

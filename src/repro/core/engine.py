@@ -42,6 +42,70 @@ class PlannedResult:
     plan_overhead: float               # seconds spent estimating + deciding
 
 
+def package_results(
+    d: np.ndarray,
+    ids: np.ndarray,
+    rounds: np.ndarray,
+    ests: np.ndarray,
+    decisions: np.ndarray,
+    share: float,
+    plan_share: float,
+) -> List[PlannedResult]:
+    """Wrap batched (B, k) arrays into per-row PlannedResults — one
+    packaging convention for the flat and sharded batch paths (``share`` is
+    the batch wall time split evenly across rows, plan overhead included)."""
+    strategy = {PRE_FILTER: "pre", POST_FILTER: "post"}
+    return [
+        PlannedResult(
+            SearchResult(d[j : j + 1], ids[j : j + 1], share,
+                         strategy[int(decisions[j])],
+                         n_expansions=int(rounds[j])),
+            float(ests[j]), int(decisions[j]), plan_share,
+        )
+        for j in range(len(ests))
+    ]
+
+
+def _execute_grouped(
+    pre_exec: PreFilterExec,
+    post_exec: PostFilterExec,
+    queries: np.ndarray,
+    preds: Sequence[Predicate],
+    k: int,
+    decisions: np.ndarray,
+    ests: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Decision-grouped batch execution — the ONE implementation behind both
+    the flat (`FilteredANNEngine.batch_query`) and sharded
+    (`CorpusShard.search_batch`) paths.
+
+    The pre-filter group evaluates each distinct predicate's mask once and
+    runs one fused masked top-k over all queries sharing it; the post-filter
+    group runs one row-faithful batched IVF search.  Returns
+    ``(dists (B, k), ids (B, k) local, expansion_rounds (B,))``.
+    """
+    b = len(preds)
+    out_d = np.full((b, k), np.inf, np.float32)
+    out_i = np.full((b, k), -1, np.int32)
+    rounds = np.zeros(b, np.int64)
+    pre_groups: dict = {}
+    for i in range(b):
+        if decisions[i] == PRE_FILTER:
+            pre_groups.setdefault(preds[i], []).append(i)
+    for pred, rows in pre_groups.items():
+        res = pre_exec.search(queries[rows], pred, k)
+        out_d[rows], out_i[rows] = res.dists, res.ids
+    post_rows = [i for i in range(b) if decisions[i] == POST_FILTER]
+    if post_rows:
+        d, ids, rnd = post_exec.search_rows(
+            queries[post_rows], [preds[i] for i in post_rows], k,
+            [float(ests[i]) for i in post_rows],
+        )
+        out_d[post_rows], out_i[post_rows] = d, ids
+        rounds[post_rows] = rnd
+    return out_d, out_i, rounds
+
+
 @dataclasses.dataclass
 class CorpusShard:
     """One partition of the corpus with its own pre-/post-filter executors.
@@ -69,9 +133,30 @@ class CorpusShard:
             res = self.pre_exec.search(q, pred, k)
         else:
             res = self.post_exec.search(q, pred, k, est_selectivity=est_selectivity)
-        valid = res.ids >= 0
-        res.ids = np.where(valid, self.ids[np.maximum(res.ids, 0)], -1).astype(np.int32)
+        res.ids = self._to_global(res.ids)
         return res
+
+    def _to_global(self, ids: np.ndarray) -> np.ndarray:
+        valid = ids >= 0
+        return np.where(valid, self.ids[np.maximum(ids, 0)], -1).astype(np.int32)
+
+    def search_batch(
+        self,
+        queries: np.ndarray,
+        preds: Sequence[Predicate],
+        k: int,
+        decisions: np.ndarray,
+        ests: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Run a whole planned batch on this shard (decision-grouped, same
+        shared ``_execute_grouped`` core as
+        :meth:`FilteredANNEngine.batch_query`).  Returns
+        ``(dists (B, k), ids (B, k) GLOBAL, expansion_rounds (B,))`` ready to
+        stack across shards for one batched ``merge_topk``."""
+        out_d, out_i, rounds = _execute_grouped(
+            self.pre_exec, self.post_exec, queries, preds, k, decisions, ests
+        )
+        return out_d, self._to_global(out_i), rounds
 
 
 class FilteredANNEngine:
@@ -132,15 +217,18 @@ class FilteredANNEngine:
         from ..index.flat import l2_topk
 
         n, d = self.vectors.shape
-        q = np.zeros((1, d), np.float32)
+        # the pre-filter executor pads query batches to pow2 with floor 8,
+        # so (8, p) is the shape every small-batch (and per-query) search hits
+        q = np.zeros((8, d), np.float32)
         p = 16
         while p <= 2 * n:
             sub = np.zeros((min(p, 1 << 24), d), np.float32)
             m = np.ones(sub.shape[0], bool)
             l2_topk(q, sub, min(k, sub.shape[0]), m)
             p *= 2
-        l2_topk(q, self.vectors, k)                       # ground-truth shape
-        l2_topk(q, self.vectors, k, np.ones(n, bool))
+        q1 = np.zeros((1, d), np.float32)
+        l2_topk(q1, self.vectors, k)                      # ground-truth shape
+        l2_topk(q1, self.vectors, k, np.ones(n, bool))
 
     # ------------------------------------------------------------------
     def fit(
@@ -202,6 +290,24 @@ class FilteredANNEngine:
         )
         return est, decision, time.perf_counter() - t0
 
+    def plan_batch(
+        self, preds: Sequence[Predicate], k: int = 10
+    ) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Batched :meth:`plan`: one selectivity pass, one (B, F) feature
+        matrix, ONE planner jit dispatch instead of B.
+
+        Returns ``(est_selectivities (B,), decisions (B,), plan_overhead_s)``
+        where the overhead covers the whole batch.
+        """
+        t0 = time.perf_counter()
+        ests = self.estimator.estimate_batch(preds)
+        fm = self.feat.matrix(preds, ests, k)
+        if self.planner.params:
+            decisions = self.planner.decide(fm).astype(np.int32)
+        else:
+            decisions = np.where(ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
+        return ests, decisions, time.perf_counter() - t0
+
     def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:
         """Partition the corpus into ``n_shards`` contiguous shards, each with
         its own pre-filter executor and post-filter IVF index.
@@ -251,7 +357,29 @@ class FilteredANNEngine:
     def batch_query(
         self, queries: np.ndarray, preds: Sequence[Predicate], k: int = 10
     ) -> List[PlannedResult]:
-        return [self.query(queries[i], preds[i], k) for i in range(len(preds))]
+        """Batched plan -> group-by-decision -> execute.
+
+        Plans the whole batch in one pass (:meth:`plan_batch`), then runs the
+        shared decision-grouped executor (``_execute_grouped``): the
+        pre-filter group evaluates each distinct predicate's mask ONCE and
+        runs one fused masked top-k over all queries sharing it; the
+        post-filter group runs one row-faithful batched IVF search with
+        vectorised candidate filtering.  Results are identical to B
+        independent :meth:`query` calls (same executors, same per-row
+        parameters), only with the per-query Python/jit dispatch overhead
+        amortised; per-result ``elapsed`` is the batch wall time split
+        evenly across rows.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        b = len(preds)
+        ests, decisions, plan_overhead = self.plan_batch(preds, k)
+        plan_share = plan_overhead / max(b, 1)
+        t0 = time.perf_counter()
+        d, ids, rounds = _execute_grouped(
+            self.pre_exec, self.post_exec, queries, preds, k, decisions, ests
+        )
+        share = (time.perf_counter() - t0) / max(b, 1) + plan_share
+        return package_results(d, ids, rounds, ests, decisions, share, plan_share)
 
     # ------------------------------------------------------------------
     def ground_truth(self, q: np.ndarray, pred: Predicate, k: int = 10) -> np.ndarray:

@@ -14,14 +14,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..index.acorn import AcornIndex
 from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
+from ..kernels.ops import fused_masked_topk
 from .predicates import Predicate
+from .util import next_pow2
 
 __all__ = ["SearchResult", "PreFilterExec", "PostFilterExec", "AcornExec", "recall_at_k"]
 
@@ -72,16 +74,23 @@ class PreFilterExec:
         # pad the compacted subset to the next power of two so the jit'd
         # top-k sees O(log N) distinct shapes, not one per query (otherwise
         # recompilation time pollutes the utility labels the planner learns
-        # from)
+        # from).  The query batch pads the same way (floor 8): the batched
+        # serving path stacks all queries sharing a predicate into ONE fused
+        # call, and pow2 query shapes keep the compile set O(log B) — with
+        # the floor making single-query and small-group calls share one
+        # shape (identical per-row results by construction).
         n_pass = idx.size
-        p = 1 << max(0, int(np.ceil(np.log2(max(n_pass, 16)))))
+        p = next_pow2(n_pass, floor=16)
+        bp = next_pow2(b, floor=8)
         sub = np.zeros((p, self.vectors.shape[1]), np.float32)
         sub[:n_pass] = self.vectors[idx]
         valid_rows = np.zeros(p, bool)
         valid_rows[:n_pass] = True
+        qp = np.zeros((bp, self.vectors.shape[1]), np.float32)
+        qp[:b] = np.asarray(queries, np.float32)
         kk = min(k, n_pass)
-        d, local = l2_topk(np.asarray(queries, np.float32), sub, kk, valid_rows)
-        d, local = np.asarray(d), np.asarray(local)
+        d, local = fused_masked_topk(qp, sub, valid_rows, kk)
+        d, local = np.asarray(d)[:b], np.asarray(local)[:b]
         ids = np.full((b, k), -1, np.int32)
         dist = np.full((b, k), np.inf, np.float32)
         valid = local >= 0
@@ -106,6 +115,29 @@ class PostFilterExec:
         self.cat, self.num = cat, num
         self.alpha0, self.nprobe0, self.max_rounds = alpha0, nprobe0, max_rounds
 
+    def initial_params(self, k: int, est_selectivity: Optional[float] = None) -> Tuple[int, int]:
+        """Initial ``(candidate budget, nprobe)`` for one query.
+
+        ``est_selectivity`` (from the planner's estimator) sizes BOTH knobs:
+        to surface ~alpha0*k predicate-passing candidates the scan must cover
+        ~alpha0*k/selectivity corpus points, so nprobe ~ alpha0*k*L/(sel*N)
+        AND the candidate request itself must be ~alpha0*k/sel — a budget of
+        only alpha0*k at low selectivity loses most candidates to the filter
+        and pays extra doubling rounds (or recall at the round cap).  Both
+        values round up to powers of two so a batch of queries collapses into
+        a handful of shared (budget, nprobe) groups — the grouping the
+        batched executor exploits.
+        """
+        n, n_lists = self.index.n, self.index.n_lists
+        want = self.alpha0 * k
+        nprobe = self.nprobe0
+        if est_selectivity is not None and est_selectivity > 0:
+            want_points = self.alpha0 * k / est_selectivity
+            nprobe_sel = int(np.ceil(want_points * n_lists / n))
+            nprobe = int(np.clip(nprobe_sel, self.nprobe0, n_lists))
+            want = max(want, int(np.ceil(want_points)))
+        return min(next_pow2(want), n), min(next_pow2(nprobe), n_lists)
+
     def search(
         self,
         queries: np.ndarray,
@@ -113,48 +145,87 @@ class PostFilterExec:
         k: int,
         est_selectivity: Optional[float] = None,
     ) -> SearchResult:
-        """``est_selectivity`` (from the planner's estimator) sizes the
-        initial probe width: to surface ~alpha*k predicate-passing candidates
-        the scan must cover ~alpha*k/selectivity corpus points, i.e.
-        nprobe ~ alpha*k*L/(sel*N).  Without it the executor starts at the
-        static default and pays extra doubling rounds — or worse, stops at k
-        *valid but not top-k* results (recall loss, the paper's §1 point)."""
+        """Single-predicate entry point; delegates to the row-faithful batched
+        core so the per-query and batched serving paths share one
+        implementation (and therefore return identical ids)."""
         t0 = time.perf_counter()
         q = np.asarray(queries, np.float32)
         b = q.shape[0]
-        alpha, nprobe = self.alpha0, self.nprobe0
-        if est_selectivity is not None and est_selectivity > 0:
-            want_points = self.alpha0 * k / est_selectivity
-            nprobe_sel = int(np.ceil(want_points * self.index.n_lists / self.index.n))
-            nprobe = int(np.clip(nprobe_sel, self.nprobe0, self.index.n_lists))
-        rounds = 0
+        out_d, out_i, rounds = self.search_rows(q, [pred] * b, k, [est_selectivity] * b)
+        n_exp = int(rounds.max()) if rounds.size else 0
+        return SearchResult(out_d, out_i, time.perf_counter() - t0, "post", n_exp)
+
+    def search_rows(
+        self,
+        q: np.ndarray,
+        preds: Sequence[Predicate],
+        k: int,
+        ests: Sequence[Optional[float]],
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Row-faithful batched post-filter search (per-row predicates).
+
+        Every row runs exactly the (budget, nprobe) doubling schedule a
+        dedicated ``search`` call would run — rows whose current parameters
+        coincide share one IVF dispatch, and candidate filtering is a single
+        vectorised predicate evaluation per distinct predicate instead of a
+        Python loop over rows.  Because ``IVFIndex.search`` is row-independent,
+        batched results are identical to B independent calls, only cheaper.
+        Returns ``(dists (B, k), ids (B, k), expansion_rounds (B,))``.
+        """
+        b = q.shape[0]
+        n, n_lists = self.index.n, self.index.n_lists
+        params = [self.initial_params(k, e) for e in ests]
+        want = np.array([w for w, _ in params], np.int64)
+        nprobe = np.array([p for _, p in params], np.int64)
+        rounds = np.zeros(b, np.int64)
         out_d = np.full((b, k), np.inf, np.float32)
         out_i = np.full((b, k), -1, np.int32)
-        pending = np.arange(b)
-        # predicate evaluated lazily on retrieved candidates only
-        while pending.size and rounds < self.max_rounds:
-            want = min(alpha * k, self.index.n)
-            d, ids = self.index.search(q[pending], want, nprobe=nprobe)
-            for row, qi in enumerate(pending):
-                valid = ids[row] >= 0
-                cand = ids[row][valid]
-                cd = d[row][valid]
-                if cand.size:
-                    keep = pred.eval(self.cat[cand], self.num[cand])
-                    cand, cd = cand[keep], cd[keep]
-                kk = min(k, cand.size)
-                out_i[qi, :kk] = cand[:kk]
-                out_d[qi, :kk] = cd[:kk]
-                out_i[qi, kk:] = -1
-                out_d[qi, kk:] = np.inf
+        # a row pays at most max_rounds IVF dispatches: the initial search
+        # plus up to max_rounds - 1 doubling rounds
+        pending = np.arange(b) if self.max_rounds > 0 else np.empty(0, np.int64)
+        # predicates evaluated lazily on retrieved candidates only
+        while pending.size:
+            groups: dict = {}
+            for qi in pending:
+                groups.setdefault((int(want[qi]), int(nprobe[qi])), []).append(int(qi))
+            for (w, npb), rows_l in groups.items():
+                rows = np.asarray(rows_l)
+                d, ids = self.index.search(q[rows], w, nprobe=npb)
+                # one predicate evaluation per distinct predicate in the group
+                keep = np.zeros(ids.shape, bool)
+                bypred: dict = {}
+                for j, qi in enumerate(rows_l):
+                    bypred.setdefault(preds[qi], []).append(j)
+                for p, js in bypred.items():
+                    flat = ids[js].reshape(-1)
+                    pos = flat >= 0
+                    kp = np.zeros(flat.size, bool)
+                    if pos.any():
+                        kp[pos] = p.eval(self.cat[flat[pos]], self.num[flat[pos]])
+                    keep[js] = kp.reshape(len(js), -1)
+                # first k passing candidates per row, in distance order: a
+                # stable argsort of ~keep floats passing slots to the front
+                # without reordering among themselves
+                kk = min(k, ids.shape[1])
+                order = np.argsort(~keep, axis=1, kind="stable")[:, :kk]
+                sel_i = np.take_along_axis(ids, order, axis=1)
+                sel_d = np.take_along_axis(d, order, axis=1)
+                sel_keep = np.take_along_axis(keep, order, axis=1)
+                blk_i = np.full((rows.size, k), -1, np.int32)
+                blk_d = np.full((rows.size, k), np.inf, np.float32)
+                blk_i[:, :kk] = np.where(sel_keep, sel_i, -1)
+                blk_d[:, :kk] = np.where(sel_keep, sel_d, np.inf)
+                out_i[rows] = blk_i
+                out_d[rows] = blk_d
             got = (out_i[pending] >= 0).sum(1)
-            exhausted = alpha * k >= self.index.n and nprobe >= self.index.n_lists
-            pending = pending[got < k] if not exhausted else np.empty(0, np.int64)
+            exhausted = (want[pending] >= n) & (nprobe[pending] >= n_lists)
+            more = (got < k) & ~exhausted & (rounds[pending] + 1 < self.max_rounds)
+            pending = pending[more]
             if pending.size:
-                alpha *= 2                      # paper: iteratively double α
-                nprobe = min(nprobe * 2, self.index.n_lists)
-                rounds += 1
-        return SearchResult(out_d, out_i, time.perf_counter() - t0, "post", rounds)
+                want[pending] = np.minimum(want[pending] * 2, n)   # paper: double α
+                nprobe[pending] = np.minimum(nprobe[pending] * 2, n_lists)
+                rounds[pending] += 1
+        return out_d, out_i, rounds
 
 
 class AcornExec:

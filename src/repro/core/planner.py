@@ -22,6 +22,7 @@ import numpy as np
 
 from .predicates import Predicate
 from .stats import DatasetStats
+from .util import next_pow2
 
 __all__ = ["CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER", "roc_auc"]
 
@@ -85,6 +86,28 @@ class PlannerFeatures:
             ],
             dtype=np.float32,
         )
+
+    _KIND_COL = {"label": 6, "range": 7, "mixed": 8}
+
+    def matrix(self, preds: Sequence[Predicate], est_sels: np.ndarray, k: int) -> np.ndarray:
+        """Batched :meth:`vector`: one (B, F) matrix, row i == vector(preds[i]).
+
+        Dataset-level features broadcast; selectivity features compute in
+        float64 before the float32 cast, matching the scalar path exactly.
+        """
+        b = len(preds)
+        st = self.stats
+        es = np.asarray(est_sels, np.float64)
+        f = np.zeros((b, self.N_FEATURES), np.float32)
+        f[:, 0] = np.log10(max(st.n, 1))
+        f[:, 1] = st.dim / 1000.0
+        f[:, 2] = st.dist_measure
+        f[:, 3] = es
+        f[:, 4] = np.log10(es + 1e-6)
+        f[:, 5] = np.log2(max(k, 1))
+        for i, p in enumerate(preds):
+            f[i, self._KIND_COL[p.kind]] = 1.0
+        return f
 
 
 # ----------------------------------------------------------------------
@@ -208,11 +231,16 @@ class CorePlanner:
                 if mean_auc > best_auc:
                     best_auc, best_l2 = mean_auc, l2
             self.best_l2_, self.val_auc_ = best_l2, best_auc
-        # final fit on all data with the selected L2 (held-out slice for early stop)
+        # final fit on all data with the selected L2 (held-out slice for early
+        # stop).  The holdout must leave a non-empty train split: with n <= 4
+        # examples max(4, n//10) would swallow everything and _train_once
+        # would run on zero rows (NaN loss) — skip the holdout instead.
         n_val = max(4, n // 10)
+        if n_val >= n:
+            n_val = 0
         perm = np.random.default_rng(self.seed).permutation(n)
         va, tr = perm[:n_val], perm[n_val:]
-        val_ok = len(set(y[va].tolist())) > 1
+        val_ok = n_val > 0 and len(set(y[va].tolist())) > 1
         self.params, _ = self._train_once(
             xn[tr], y[tr], self.best_l2_, self.seed,
             xn[va] if val_ok else None, y[va] if val_ok else None,
@@ -221,10 +249,19 @@ class CorePlanner:
 
     # ------------------------------------------------------------------
     def predict_proba(self, features: np.ndarray) -> np.ndarray:
-        """P(post-filter is the better strategy) per query."""
+        """P(post-filter is the better strategy) per query.
+
+        Accepts (F,) or (B, F); one jit dispatch either way.  The batch axis
+        pads to the next power of two so serving sees O(log B) compiled
+        shapes, not one per batch size.
+        """
         assert self.params is not None, "planner not trained"
         x = (np.atleast_2d(features).astype(np.float32) - self.mu) / self.sigma
-        return np.asarray(self._predict_jit(self.params, jnp.asarray(x)))
+        b = x.shape[0]
+        bp = next_pow2(b)
+        if bp != b:
+            x = np.concatenate([x, np.zeros((bp - b, x.shape[1]), np.float32)])
+        return np.asarray(self._predict_jit(self.params, jnp.asarray(x)))[:b]
 
     def decide(self, features: np.ndarray) -> np.ndarray:
         """0 = pre-filter, 1 = post-filter, per query row."""

@@ -98,7 +98,10 @@ class SelectivityEstimator:
         return self
 
     # ------------------------------------------------------------------
-    def estimate(self, pred: Predicate) -> float:
+    def _route(self, pred: Predicate):
+        """Shared routing for estimate/estimate_batch: returns a direct
+        ``("value", s)`` estimate, or ``("gbm", features)`` when the predicate
+        needs the model (so a batch can pool its GBM rows into one predict)."""
         st = self.stats
         lbls = label_ids(pred, st.cat_offsets)
 
@@ -107,17 +110,45 @@ class SelectivityEstimator:
             s = 1.0
             for r in pred.ranges:
                 s *= st.range_sel(r)
-            return float(np.clip(s, 0.0, 1.0))
+            return "value", float(np.clip(s, 0.0, 1.0))
 
         if pred.kind == "label":
             if len(lbls) == 1:
-                return st.single_label_sel(lbls[0])          # exact lookup
+                return "value", st.single_label_sel(lbls[0])        # exact lookup
             if len(lbls) == 2:
-                return st.pair_joint_sel(lbls[0], lbls[1])   # exact matrix lookup
+                return "value", st.pair_joint_sel(lbls[0], lbls[1]) # exact matrix
 
         # >=3 labels or mixed: GBM refinement (falls back to independence
         # estimate if the model was never fit).
         if self.model is None:
-            return float(np.clip(st.independence_sel(pred), 0.0, 1.0))
-        z = float(self.model.predict(self.features(pred)[None, :])[0])
+            return "value", float(np.clip(st.independence_sel(pred), 0.0, 1.0))
+        return "gbm", self.features(pred)
+
+    def estimate(self, pred: Predicate) -> float:
+        kind, payload = self._route(pred)
+        if kind == "value":
+            return payload
+        z = float(self.model.predict(payload[None, :])[0])
         return float(np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0))
+
+    def estimate_batch(self, preds: Sequence[Predicate]) -> np.ndarray:
+        """Vectorised ``estimate`` over a batch of predicates.
+
+        Exact/histogram routes resolve directly; all GBM-routed predicates
+        share ONE ``model.predict`` over a stacked (B_gbm, F) feature matrix.
+        Per-row tree traversal is row-independent, so results are identical
+        to B independent :meth:`estimate` calls.
+        """
+        out = np.zeros(len(preds), dtype=np.float64)
+        gbm_rows, gbm_idx = [], []
+        for i, pred in enumerate(preds):
+            kind, payload = self._route(pred)
+            if kind == "value":
+                out[i] = payload
+            else:
+                gbm_rows.append(payload)
+                gbm_idx.append(i)
+        if gbm_rows:
+            z = self.model.predict(np.stack(gbm_rows))
+            out[gbm_idx] = np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0)
+        return out

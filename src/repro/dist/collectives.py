@@ -115,7 +115,20 @@ def merge_topk(
         d = np.concatenate([d, np.full((b, pad), np.inf, np.float32)], axis=1)
         i = np.concatenate([i, np.full((b, pad), -1, i.dtype)], axis=1)
     d = np.where(i < 0, np.inf, d)
-    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    # canonical (distance-bits, column) composite key, like IVFIndex.search:
+    # squared-L2 distances are non-negative, so the f32 bit pattern sorts
+    # like the float and equal distances break ties by column (= shard
+    # order) — deterministic at the k boundary even on tie-heavy corpora,
+    # while argpartition keeps the merge o(C log C) as n_shards*k grows
+    key = (
+        np.ascontiguousarray(d).view(np.int32).astype(np.int64) << 32
+    ) | np.arange(d.shape[1], dtype=np.int64)[None, :]
+    if d.shape[1] > k:
+        part = np.argpartition(key, k - 1, axis=1)[:, :k]
+        inner = np.argsort(np.take_along_axis(key, part, axis=1), axis=1)
+        order = np.take_along_axis(part, inner, axis=1)
+    else:
+        order = np.argsort(key, axis=1)[:, :k]
     rows = np.arange(d.shape[0])[:, None]
     out_d, out_i = d[rows, order], i[rows, order]
     out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from .decode_attention import TS, decode_attention_kernel
 from .masked_l2 import KPAD, TN, TQ, masked_l2_topk_kernel
 
-__all__ = ["masked_l2_topk", "decode_attention"]
+__all__ = ["masked_l2_topk", "decode_attention", "fused_masked_topk"]
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -53,6 +53,30 @@ def masked_l2_topk(
         qp, xp, mp, interpret=_auto_interpret(interpret)
     )
     return out_d[:b, :k], out_i[:b, :k]
+
+
+def fused_masked_topk(
+    queries: jax.Array,  # (B, d)
+    corpus: jax.Array,   # (N, d)
+    mask: jax.Array,     # (N,) bool
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Serving-path entry for the fused masked brute-force top-k.
+
+    Dispatches to the Pallas kernel on TPU (one VMEM-resident sweep, the
+    batched pre-filter group's hot loop) and to the jit'd XLA ``l2_topk``
+    elsewhere — same contract either way: (dists (B, k), ids (B, k)),
+    masked-out/short rows padded with +inf / -1.  The XLA fallback shares
+    the module-level jit cache with the engine's bucket warmup, which
+    pre-compiles the width-8 query shape every per-query (and small-group)
+    call hits; wider pow2 batch shapes (16, 32, ...) compile once on first
+    use and are cached for the rest of the process.
+    """
+    if jax.default_backend() == "tpu" and k <= KPAD:
+        return masked_l2_topk(queries, corpus, mask, k)
+    from ..index.flat import l2_topk
+
+    return l2_topk(queries, corpus, k, mask)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -441,9 +441,41 @@ class Model:
             cache["xv"] = jnp.zeros((b, cfg.frontend_len, kvh, dh), dt)
         return cache
 
-    def prefill(self, params, batch, max_len: int):
+    @property
+    def supports_ragged_prefill(self) -> bool:
+        """Whether unequal-length prompt batching is EXACT for this family.
+
+        Attention families are: causal masking isolates each row's last real
+        position from its pad tail.  Recurrent families (ssm, hybrid) fold
+        pad steps into carried slstm/mlstm/mamba state, so they must be
+        served equal-length — the single source of truth ServeEngine checks.
+        """
+        return self.cfg.family not in ("ssm", "hybrid")
+
+    def _last_hidden(self, x, lengths, n_prefix: int = 0):
+        """Hidden state at each row's LAST REAL position.
+
+        ``lengths`` (B,) is the per-row prompt length; in a padded batch the
+        max-length position is a pad slot for shorter rows, so logits must be
+        gathered at ``n_prefix + lengths - 1`` per row.  ``lengths=None``
+        keeps the equal-length fast path (last column)."""
+        if lengths is None:
+            return x[:, -1:, :]
+        pos = n_prefix + jnp.maximum(lengths, 1) - 1
+        return jnp.take_along_axis(x, pos[:, None, None], axis=1)
+
+    def prefill(self, params, batch, max_len: int, lengths: Optional[jax.Array] = None):
         """Run the prompt through the model, returning (last-token logits,
-        populated cache).  For encdec the 'prompt' is the encoder input."""
+        populated cache).  For encdec the 'prompt' is the encoder input.
+
+        ``lengths`` (B,) enables exact unequal-length batching for attention
+        families: causal masking keeps each row's hidden state at position
+        ``lengths-1`` independent of the pad tail, and pad kv-cache entries
+        lie beyond the decode-time length mask (each is overwritten before it
+        enters the attention window).  Recurrent families (ssm, hybrid —
+        anything carrying slstm/mlstm/mamba state) still fold pad steps into
+        that state — serve equal-length batches there (ServeEngine enforces
+        this)."""
         cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
@@ -470,7 +502,7 @@ class Model:
         if cfg.family == "ssm":
             x, states = self._xlstm_prefill(params, x)
             cache.update(states)
-            logits = self._logits(params, x[:, -1:, :])[:, 0]
+            logits = self._logits(params, self._last_hidden(x, lengths, n_prefix))[:, 0]
             return logits, cache
 
         windows = _windows(cfg, cfg.n_layers)
@@ -525,7 +557,7 @@ class Model:
         if cfg.family == "hybrid":
             cache["ssm_h"] = per_layer["ssm_h"]
             cache["ssm_conv"] = per_layer["ssm_conv"]
-        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        logits = self._logits(params, self._last_hidden(x, lengths, n_prefix))[:, 0]
         return logits, cache
 
     def _xlstm_prefill(self, params, x):

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.engine import FilteredANNEngine, PlannedResult
+from ..core.engine import FilteredANNEngine, PlannedResult, package_results
 from ..core.executors import SearchResult
 from ..core.predicates import Predicate
 from ..dist.collectives import merge_topk
@@ -52,7 +52,9 @@ class ServeEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+        self._prefill = jax.jit(
+            lambda p, b, lens: model.prefill(p, b, max_len, lengths=lens)
+        )
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
@@ -69,21 +71,43 @@ class ServeEngine:
 
     def _serve_batch(self, batch: List[Request]):
         b = len(batch)
-        # right-align prompts into one padded matrix for a single prefill
+        # left-align prompts into one padded matrix for a single prefill; the
+        # model gathers each row's logits at its true last position (plens-1),
+        # so unequal-length prompts decode exactly as batch=1 runs (pad-slot
+        # kv entries sit beyond each row's length mask and are overwritten as
+        # decode advances)
         plens = np.array([len(r.prompt) for r in batch], np.int32)
+        # models that carry recurrent prefill state fold pad steps into it,
+        # so unequal-length batching is NOT exact for them — refuse rather
+        # than silently diverge from batch=1 runs (the model declares this
+        # via Model.supports_ragged_prefill, keeping the family knowledge
+        # where the state lives)
+        ragged_ok = getattr(self.model, "supports_ragged_prefill", True)
+        if not ragged_ok and len(set(plens.tolist())) > 1:
+            raise ValueError(
+                "this model carries recurrent prefill state, which pad "
+                "tokens pollute: serve equal-length prompt batches "
+                f"(got lengths {sorted(set(plens.tolist()))})"
+            )
         s = int(plens.max())
         toks = np.zeros((b, s), np.int32)
         for i, r in enumerate(batch):
-            toks[i, : plens[i]] = r.prompt  # left-aligned; lengths mask the rest
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        # NOTE: single prefill assumes equal lengths for exactness; per-slot
-        # lengths are honoured during decode via the lengths vector.
+            toks[i, : plens[i]] = r.prompt
         lengths = jnp.asarray(plens)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, lengths
+        )
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for r, t in zip(batch, np.asarray(next_tok)):
-            r.out_tokens = [int(t)]
+        host = np.asarray(next_tok)
+        for i, r in enumerate(batch):
+            t = int(host[i])
+            r.out_tokens = [t]
+            if (self.eos_id is not None and t == self.eos_id) or r.max_new_tokens <= 1:
+                r.done = True
         max_new = max(r.max_new_tokens for r in batch)
         for _ in range(max_new - 1):
+            if all(r.done for r in batch):
+                break  # every slot hit EOS/its budget: stop paying decode steps
             logits, cache = self._decode(self.params, cache, next_tok, lengths)
             lengths = lengths + 1
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -94,6 +118,8 @@ class ServeEngine:
                     r.out_tokens.append(t)
                     if self.eos_id is not None and t == self.eos_id:
                         r.done = True
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
         for r in batch:
             r.done = True
 
@@ -138,5 +164,24 @@ class ShardedANNEngine:
         )
         return PlannedResult(res, est, decision, plan_overhead)
 
-    def batch_query(self, queries: np.ndarray, preds, k: int = 10):
-        return [self.query(queries[i], preds[i], k) for i in range(len(preds))]
+    def batch_query(self, queries: np.ndarray, preds, k: int = 10) -> List[PlannedResult]:
+        """Batched sharded path: plan the whole batch ONCE, fan the batch —
+        not single queries — out to every shard (each shard runs its
+        decision-grouped executors over all B rows), then merge all shards'
+        (B, k) results with one batched ``merge_topk``.  Ids are identical to
+        B independent :meth:`query` calls; per-result ``elapsed`` is the
+        fan-out+merge wall time split evenly across rows."""
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        b = len(preds)
+        ests, decisions, plan_overhead = self.engine.plan_batch(preds, k)
+        plan_share = plan_overhead / max(b, 1)
+        t0 = time.perf_counter()
+        per_shard = [s.search_batch(queries, preds, k, decisions, ests) for s in self.shards]
+        d, i = merge_topk(
+            np.stack([r[0] for r in per_shard]),
+            np.stack([r[1] for r in per_shard]),
+            k,
+        )
+        rounds = np.max(np.stack([r[2] for r in per_shard]), axis=0)
+        share = (time.perf_counter() - t0) / max(b, 1) + plan_share
+        return package_results(d, i, rounds, ests, decisions, share, plan_share)

@@ -66,6 +66,25 @@ def test_ivf_jax_matches_np(corpus):
     np.testing.assert_allclose(d_np, np.asarray(d_j), rtol=1e-3, atol=1e-3)
 
 
+def test_ivf_search_row_independent(corpus):
+    """A row must return bit-identical results searched alone or inside any
+    batch — the invariant the batched serving path's exactness rests on.
+    Integer-ish corpora tie distances constantly, so this catches both BLAS
+    shape-dependence and tie-handling that depends on batch padding."""
+    x, q = corpus
+    xi = np.round(x * 4).astype(np.float32)     # force frequent distance ties
+    qi = np.round(q * 4).astype(np.float32)
+    idx = IVFIndex(xi, n_lists=32, seed=0).build()
+    for k, nprobe in ((10, 4), (100, 8), (5, 32)):
+        db, ib = idx.search(qi, k, nprobe=nprobe)
+        for i in range(qi.shape[0]):
+            ds, is_ = idx.search(qi[i : i + 1], k, nprobe=nprobe)
+            assert np.array_equal(ib[i], is_[0]), (k, nprobe, i)
+            assert np.array_equal(db[i], ds[0]), (k, nprobe, i)
+        d3, i3 = idx.search(qi[3:11], k, nprobe=nprobe)
+        assert np.array_equal(i3, ib[3:11]) and np.array_equal(d3, db[3:11])
+
+
 def test_ivf_masked(corpus):
     x, q = corpus
     idx = IVFIndex(x, n_lists=32, seed=0).build()

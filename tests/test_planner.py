@@ -56,6 +56,30 @@ def test_planner_deterministic():
     np.testing.assert_allclose(p1.predict_proba(x), p2.predict_proba(x), atol=1e-5)
 
 
+def test_planner_tiny_trainset():
+    """Regression: with n <= 4 examples the old max(4, n//10) holdout
+    swallowed the whole trainset and _train_once ran on zero rows (NaN loss,
+    garbage params).  Tiny sets must skip the holdout and still fit."""
+    for n in (2, 3, 4):
+        rng = np.random.default_rng(n)
+        x = rng.normal(size=(n, 9)).astype(np.float32)
+        y = (np.arange(n) % 2).astype(np.int32)
+        p = CorePlanner(seed=0).fit(x, y)
+        proba = p.predict_proba(x)
+        assert np.isfinite(proba).all(), f"n={n}: non-finite probabilities"
+        assert set(p.decide(x).tolist()) <= {0, 1}
+
+
+def test_planner_batched_predict_matches_rows():
+    """predict_proba on a (B, F) matrix (one jit dispatch, pow2-padded batch)
+    must match per-row calls."""
+    x, y = _toy_problem(300)
+    p = CorePlanner(seed=0).fit(x, y)
+    batched = p.predict_proba(x[:37])          # non-pow2 B exercises padding
+    rows = np.concatenate([p.predict_proba(x[i]) for i in range(37)])
+    np.testing.assert_allclose(batched, rows, atol=1e-6)
+
+
 def test_planner_proba_range():
     x, y = _toy_problem(300)
     p = CorePlanner(seed=0).fit(x, y)

@@ -1,5 +1,6 @@
 """Serving engine + RAG retrieval integration tests."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -63,6 +64,93 @@ def test_serve_matches_teacher_forced(small_model):
         nxt = int(jnp.argmax(logits[0, -1]))
         assert nxt == expected
         toks.append(nxt)
+
+
+def test_serve_unequal_length_prompts_match_solo(small_model):
+    """Regression: a padded prefill batch must gather each row's logits at
+    its TRUE last position (plens-1), not the batch max-length position —
+    for shorter prompts that is a pad slot and the whole generation forks."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in (3, 8, 5)
+    ]
+    eng = ServeEngine(model, params, batch_slots=3, max_len=32)
+    batched = eng.run(
+        [Request(uid=i, prompt=p, max_new_tokens=4) for i, p in enumerate(prompts)]
+    )
+    for i, p in enumerate(prompts):
+        solo = ServeEngine(model, params, batch_slots=1, max_len=32).run(
+            [Request(uid=0, prompt=p, max_new_tokens=4)]
+        )[0]
+        assert batched[i][0] == solo[0], f"first token forked for prompt {i}"
+        assert batched[i] == solo, f"generation forked for prompt {i}"
+
+
+class _ForcedEosModel:
+    """Stub model: first token is 2, every decode step then emits EOS=3."""
+
+    vocab, eos = 8, 3
+
+    def prefill(self, params, batch, max_len, lengths=None):
+        b = batch["tokens"].shape[0]
+        logits = jnp.zeros((b, self.vocab)).at[:, 2].set(5.0)
+        return logits, {"step": jnp.zeros((b,), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens, lengths):
+        b = tokens.shape[0]
+        return jnp.zeros((b, self.vocab)).at[:, self.eos].set(5.0), cache
+
+
+def test_serve_stops_decoding_after_all_eos():
+    """Regression: once every slot is done the engine must stop dispatching
+    jit'd decode steps instead of idling through max_new - 1 iterations."""
+    stub = _ForcedEosModel()
+    eng = ServeEngine(stub, None, batch_slots=2, max_len=16, eos_id=stub.eos)
+    calls = {"n": 0}
+    orig = eng._decode
+
+    def counting(*args):
+        calls["n"] += 1
+        return orig(*args)
+
+    eng._decode = counting
+    out = eng.run([
+        Request(uid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=12),
+        Request(uid=1, prompt=np.array([1], np.int32), max_new_tokens=12),
+    ])
+    assert out[0] == [2, stub.eos] and out[1] == [2, stub.eos]
+    assert calls["n"] == 1, f"decode dispatched {calls['n']} times after EOS"
+
+
+def test_supports_ragged_prefill_by_family():
+    """The model-level capability flag is the single source of truth the
+    serving guard consults: recurrent families must declare False."""
+    from repro.configs import get_config
+    from repro.models import Model
+
+    assert Model(get_config("qwen3-14b").reduced()).supports_ragged_prefill
+    assert not Model(get_config("xlstm-1.3b").reduced()).supports_ragged_prefill
+    assert not Model(get_config("hymba-1.5b").reduced()).supports_ragged_prefill
+
+
+def test_serve_rejects_unequal_lengths_for_recurrent_families():
+    """Recurrent prefill folds pad steps into carried state, so the engine
+    must refuse unequal-length batches rather than silently diverge."""
+    stub = _ForcedEosModel()
+    stub.supports_ragged_prefill = False
+    eng = ServeEngine(stub, None, batch_slots=2, max_len=16, eos_id=stub.eos)
+    with pytest.raises(ValueError, match="equal-length"):
+        eng.run([
+            Request(uid=0, prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4),
+            Request(uid=1, prompt=np.array([1], np.int32), max_new_tokens=4),
+        ])
+    # equal lengths stay served
+    out = eng.run([
+        Request(uid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=4),
+        Request(uid=1, prompt=np.array([3, 4], np.int32), max_new_tokens=4),
+    ])
+    assert out[0] == [2, stub.eos] and out[1] == [2, stub.eos]
 
 
 def test_rag_retrieval_respects_filter(small_model):
