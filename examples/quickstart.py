@@ -31,6 +31,6 @@ for i, p in enumerate(preds):
     rec = recall_at_k(out.result.ids, truth)
     print(
         f"  sel={sels[i]:.3f} est={out.est_selectivity:.3f} "
-        f"plan={'PRE ' if out.decision == 0 else 'POST'} "
+        f"plan={['PRE ', 'POST', 'IPRE'][out.decision]} "
         f"recall@10={rec:.2f} {out.result.elapsed*1e3:6.1f} ms"
     )

@@ -49,7 +49,7 @@ t0 = time.time()
 planned = rag.retrieve(tokens, pred, k=5)
 for i, out in enumerate(planned):
     print(
-        f"req {i}: plan={'PRE' if out.decision == 0 else 'POST'} "
+        f"req {i}: plan={['PRE', 'POST', 'IPRE'][out.decision]} "
         f"est_sel={out.est_selectivity:.3f} "
         f"retrieved={[int(x) for x in out.result.ids[0][:5]]} "
         f"({out.result.elapsed*1e3:.1f} ms)"

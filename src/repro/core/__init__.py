@@ -1,17 +1,22 @@
-from .predicates import LabelEq, Predicate, RangePred
+from .predicates import LabelEq, Predicate, RangePred, Not, Or, AnyPredicate, iter_leaves, NULL_CODE
 from .stats import DatasetStats
 from .selectivity import SelectivityEstimator
-from .planner import CorePlanner, PlannerFeatures, PRE_FILTER, POST_FILTER
-from .executors import PreFilterExec, PostFilterExec, AcornExec, SearchResult, recall_at_k
+from .planner import CorePlanner, PlannerFeatures, PRE_FILTER, POST_FILTER, INDEXED_PRE
+from .executors import (
+    PreFilterExec, IndexedPreFilterExec, PostFilterExec, AcornExec,
+    SearchResult, recall_at_k,
+)
 from .engine import FilteredANNEngine, EngineConfig, PlannedResult, CorpusShard
 from .trainer import gen_queries, gen_predicate
 from .gbm import GradientBoostingRegressor
 
 __all__ = [
-    "LabelEq", "Predicate", "RangePred",
+    "LabelEq", "Predicate", "RangePred", "Not", "Or", "AnyPredicate",
+    "iter_leaves", "NULL_CODE",
     "DatasetStats", "SelectivityEstimator",
-    "CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER",
-    "PreFilterExec", "PostFilterExec", "AcornExec", "SearchResult", "recall_at_k",
+    "CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER", "INDEXED_PRE",
+    "PreFilterExec", "IndexedPreFilterExec", "PostFilterExec", "AcornExec",
+    "SearchResult", "recall_at_k",
     "FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard",
     "gen_queries", "gen_predicate",
     "GradientBoostingRegressor",

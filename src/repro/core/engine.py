@@ -13,11 +13,21 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+# NOTE: repro.filter is imported lazily inside build_stats/shard_corpus —
+# filter's compiler depends on core.predicates, so a module-level import
+# here would make `import repro.filter` (filter-first order) hit a
+# partially-initialised package.
 from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
-from .executors import PostFilterExec, PreFilterExec, SearchResult, recall_at_k
-from .planner import CorePlanner, PlannerFeatures, POST_FILTER, PRE_FILTER
-from .predicates import Predicate
+from .executors import (
+    IndexedPreFilterExec,
+    PostFilterExec,
+    PreFilterExec,
+    SearchResult,
+    recall_at_k,
+)
+from .planner import CorePlanner, PlannerFeatures, INDEXED_PRE, POST_FILTER, PRE_FILTER
+from .predicates import AnyPredicate
 from .selectivity import SelectivityEstimator
 from .stats import DatasetStats
 
@@ -32,14 +42,20 @@ class EngineConfig:
     nprobe0: int = 8
     seed: int = 0
     default_k: int = 10                # warmed-up k for the jit'd searches
+    attr_index: bool = True            # build the bitmap/range attribute index
+    range_buckets: int = 128           # filter.ranges.DEFAULT_BUCKETS
+    pred_cache_size: int = 256         # compiled-predicate LRU entries
 
 
 @dataclasses.dataclass
 class PlannedResult:
     result: SearchResult
     est_selectivity: float
-    decision: int                      # PRE_FILTER / POST_FILTER
+    decision: int                      # PRE_FILTER / POST_FILTER / INDEXED_PRE
     plan_overhead: float               # seconds spent estimating + deciding
+
+
+STRATEGY_NAMES = {PRE_FILTER: "pre", POST_FILTER: "post", INDEXED_PRE: "ipre"}
 
 
 def package_results(
@@ -54,11 +70,10 @@ def package_results(
     """Wrap batched (B, k) arrays into per-row PlannedResults — one
     packaging convention for the flat and sharded batch paths (``share`` is
     the batch wall time split evenly across rows, plan overhead included)."""
-    strategy = {PRE_FILTER: "pre", POST_FILTER: "post"}
     return [
         PlannedResult(
             SearchResult(d[j : j + 1], ids[j : j + 1], share,
-                         strategy[int(decisions[j])],
+                         STRATEGY_NAMES[int(decisions[j])],
                          n_expansions=int(rounds[j])),
             float(ests[j]), int(decisions[j]), plan_share,
         )
@@ -68,9 +83,10 @@ def package_results(
 
 def _execute_grouped(
     pre_exec: PreFilterExec,
+    ipre_exec: Optional[IndexedPreFilterExec],
     post_exec: PostFilterExec,
     queries: np.ndarray,
-    preds: Sequence[Predicate],
+    preds: Sequence[AnyPredicate],
     k: int,
     decisions: np.ndarray,
     ests: np.ndarray,
@@ -79,22 +95,24 @@ def _execute_grouped(
     the flat (`FilteredANNEngine.batch_query`) and sharded
     (`CorpusShard.search_batch`) paths.
 
-    The pre-filter group evaluates each distinct predicate's mask once and
-    runs one fused masked top-k over all queries sharing it; the post-filter
-    group runs one row-faithful batched IVF search.  Returns
+    The two pre-filter groups (scan-masked and bitmap-masked) each evaluate
+    every distinct predicate's mask once and run one fused masked top-k over
+    all queries sharing it; the post-filter group runs one row-faithful
+    batched IVF search.  Returns
     ``(dists (B, k), ids (B, k) local, expansion_rounds (B,))``.
     """
     b = len(preds)
     out_d = np.full((b, k), np.inf, np.float32)
     out_i = np.full((b, k), -1, np.int32)
     rounds = np.zeros(b, np.int64)
-    pre_groups: dict = {}
-    for i in range(b):
-        if decisions[i] == PRE_FILTER:
-            pre_groups.setdefault(preds[i], []).append(i)
-    for pred, rows in pre_groups.items():
-        res = pre_exec.search(queries[rows], pred, k)
-        out_d[rows], out_i[rows] = res.dists, res.ids
+    for decision, ex in ((PRE_FILTER, pre_exec), (INDEXED_PRE, ipre_exec or pre_exec)):
+        groups: dict = {}
+        for i in range(b):
+            if decisions[i] == decision:
+                groups.setdefault(preds[i], []).append(i)
+        for pred, rows in groups.items():
+            res = ex.search(queries[rows], pred, k)
+            out_d[rows], out_i[rows] = res.dists, res.ids
     post_rows = [i for i in range(b) if decisions[i] == POST_FILTER]
     if post_rows:
         d, ids, rnd = post_exec.search_rows(
@@ -113,23 +131,28 @@ class CorpusShard:
     Produced by :meth:`FilteredANNEngine.shard_corpus`.  Executors operate
     on shard-local row numbers; :meth:`search` maps results back to global
     ids so shard outputs merge directly (``repro.dist.collectives.merge_topk``).
+    Each shard carries its OWN attribute index + predicate cache (bitmaps
+    are positional, so they cannot be sliced from the global index).
     """
 
     shard_id: int
     ids: np.ndarray                    # (n_local,) global row ids
     pre_exec: PreFilterExec
     post_exec: PostFilterExec
+    ipre_exec: Optional[IndexedPreFilterExec] = None
 
     def search(
         self,
         q: np.ndarray,
-        pred: Predicate,
+        pred: AnyPredicate,
         k: int,
         decision: int,
         est_selectivity: Optional[float] = None,
     ) -> SearchResult:
         """Run the planned executor on this shard; returns GLOBAL ids."""
-        if decision == PRE_FILTER:
+        if decision == INDEXED_PRE:
+            res = (self.ipre_exec or self.pre_exec).search(q, pred, k)
+        elif decision == PRE_FILTER:
             res = self.pre_exec.search(q, pred, k)
         else:
             res = self.post_exec.search(q, pred, k, est_selectivity=est_selectivity)
@@ -143,7 +166,7 @@ class CorpusShard:
     def search_batch(
         self,
         queries: np.ndarray,
-        preds: Sequence[Predicate],
+        preds: Sequence[AnyPredicate],
         k: int,
         decisions: np.ndarray,
         ests: np.ndarray,
@@ -154,7 +177,8 @@ class CorpusShard:
         ``(dists (B, k), ids (B, k) GLOBAL, expansion_rounds (B,))`` ready to
         stack across shards for one batched ``merge_topk``."""
         out_d, out_i, rounds = _execute_grouped(
-            self.pre_exec, self.post_exec, queries, preds, k, decisions, ests
+            self.pre_exec, self.ipre_exec, self.post_exec,
+            queries, preds, k, decisions, ests,
         )
         return out_d, self._to_global(out_i), rounds
 
@@ -187,10 +211,25 @@ class FilteredANNEngine:
             self.vectors, self.cat, self.num,
             sample_frac=self.config.sample_frac, seed=self.config.seed,
         )
-        self.estimator = SelectivityEstimator(self.stats)
+        t1 = time.perf_counter()
+        # bitmap/range attribute index + shared compiled-predicate cache:
+        # the estimator's exact fast path and the indexed pre-filter
+        # executor compile each predicate once between them
+        from ..filter import AttributeIndex, PredicateCache
+
+        self.attr_index = (
+            AttributeIndex.build(self.cat, self.num, self.config.range_buckets)
+            if self.config.attr_index else None
+        )
+        self.pred_cache = PredicateCache(self.config.pred_cache_size)
+        t2 = time.perf_counter()
+        self.estimator = SelectivityEstimator(
+            self.stats, index=self.attr_index, cache=self.pred_cache
+        )
         self.planner = CorePlanner(seed=self.config.seed)
         self.feat = PlannerFeatures(self.stats)
-        self.build_time_["stats"] = time.perf_counter() - t0
+        self.build_time_["stats"] = t1 - t0
+        self.build_time_["attr_index"] = t2 - t1
         return self
 
     def build(self) -> "FilteredANNEngine":
@@ -200,6 +239,9 @@ class FilteredANNEngine:
         self.ivf = IVFIndex(self.vectors, self.config.n_lists, seed=self.config.seed).build()
         t2 = time.perf_counter()
         self.pre_exec = PreFilterExec(self.vectors, self.cat, self.num)
+        self.ipre_exec = IndexedPreFilterExec(
+            self.vectors, self.cat, self.num, self.attr_index, self.pred_cache
+        )
         self.post_exec = PostFilterExec(
             self.ivf, self.cat, self.num,
             alpha0=self.config.alpha0, nprobe0=self.config.nprobe0,
@@ -229,12 +271,15 @@ class FilteredANNEngine:
         q1 = np.zeros((1, d), np.float32)
         l2_topk(q1, self.vectors, k)                      # ground-truth shape
         l2_topk(q1, self.vectors, k, np.ones(n, bool))
+        # the large-passing-set branch runs the masked top-k over the FULL
+        # corpus with the pow2-padded (floor 8) query batch — warm it too
+        l2_topk(q, self.vectors, k, np.ones(n, bool))
 
     # ------------------------------------------------------------------
     def fit(
         self,
         train_queries: Sequence[np.ndarray],
-        train_preds: Sequence[Predicate],
+        train_preds: Sequence[AnyPredicate],
         k: int = 10,
         verbose: bool = False,
     ) -> "FilteredANNEngine":
@@ -253,8 +298,8 @@ class FilteredANNEngine:
             u_pre = recall_at_k(r_pre.ids, ti) / max(r_pre.elapsed, 1e-7)
             u_post = recall_at_k(r_post.ids, ti) / max(r_post.elapsed, 1e-7)
             label = PRE_FILTER if u_pre >= u_post else POST_FILTER
-            est0 = self.estimator.estimate(pred)   # pre-GBM estimate for features
-            feats.append(self.feat.vector(pred, est0, k))
+            est0, ex0 = self.estimator.estimate_ex(pred)  # pre-GBM estimate
+            feats.append(self.feat.vector(pred, est0, k, ex0))
             labels.append(label)
             true_sels.append(true_sel)
             if verbose:
@@ -262,10 +307,10 @@ class FilteredANNEngine:
         # selectivity estimator GBM trains on the same queries (paper §3.1)
         self.estimator.fit(list(train_preds), true_sels)
         # re-extract features with the trained estimator so train/test match
-        feats = [
-            self.feat.vector(p, self.estimator.estimate(p), k)
-            for p in train_preds
-        ]
+        feats = []
+        for p in train_preds:
+            est, ex = self.estimator.estimate_ex(p)
+            feats.append(self.feat.vector(p, est, k, ex))
         self.planner.fit(np.stack(feats), np.asarray(labels))
         # warm the single-query predict shape: the first live query must not
         # pay the (1, F) jit compile (~150 ms) inside its latency budget
@@ -274,24 +319,32 @@ class FilteredANNEngine:
         return self
 
     # ------------------------------------------------------------------
-    def plan(self, pred: Predicate, k: int = 10) -> Tuple[float, int, float]:
+    def plan(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, float]:
         """Estimate selectivity + pick a strategy, without executing.
 
-        Returns ``(est_selectivity, decision, plan_overhead_s)``.  The plan
-        depends only on predicate and dataset statistics — not on which
-        corpus rows are local — so a sharded deployment plans ONCE and
+        Returns ``(est_selectivity, decision, plan_overhead_s)``; decisions
+        are 3-way (pre / post / indexed-pre — index-covered predicates get
+        the exact popcount selectivity AND the bitmap-masked executor).
+        The plan depends only on predicate and dataset statistics — not on
+        which corpus rows are local — so a sharded deployment plans ONCE and
         broadcasts the decision to every shard (serve.ShardedANNEngine).
         """
         t0 = time.perf_counter()
-        est = self.estimator.estimate(pred)
-        fv = self.feat.vector(pred, est, k)
-        decision = int(self.planner.decide(fv)[0]) if self.planner.params else (
-            PRE_FILTER if est < 0.05 else POST_FILTER
-        )
+        est, exact = self.estimator.estimate_ex(pred)
+        fv = self.feat.vector(pred, est, k, exact)
+        if self.planner.params:
+            decision = int(self.planner.decide(fv)[0])
+        else:
+            # untrained fallback mirrors the planner's cost heuristic: the
+            # selectivity threshold picks pre vs post, coverage upgrades
+            # pre to the indexed variant
+            decision = PRE_FILTER if est < 0.05 else POST_FILTER
+            if decision == PRE_FILTER and exact:
+                decision = INDEXED_PRE
         return est, decision, time.perf_counter() - t0
 
     def plan_batch(
-        self, preds: Sequence[Predicate], k: int = 10
+        self, preds: Sequence[AnyPredicate], k: int = 10
     ) -> Tuple[np.ndarray, np.ndarray, float]:
         """Batched :meth:`plan`: one selectivity pass, one (B, F) feature
         matrix, ONE planner jit dispatch instead of B.
@@ -300,12 +353,15 @@ class FilteredANNEngine:
         where the overhead covers the whole batch.
         """
         t0 = time.perf_counter()
-        ests = self.estimator.estimate_batch(preds)
-        fm = self.feat.matrix(preds, ests, k)
+        ests, exact = self.estimator.estimate_batch_ex(preds)
+        fm = self.feat.matrix(preds, ests, k, exact)
         if self.planner.params:
             decisions = self.planner.decide(fm).astype(np.int32)
         else:
             decisions = np.where(ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
+            decisions = np.where(
+                (decisions == PRE_FILTER) & exact, INDEXED_PRE, decisions
+            ).astype(np.int32)
         return ests, decisions, time.perf_counter() - t0
 
     def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:
@@ -321,6 +377,8 @@ class FilteredANNEngine:
         dropped rather than built.
         """
         assert n_shards >= 1
+        from ..filter import AttributeIndex, PredicateCache
+
         parts = np.array_split(np.arange(self.vectors.shape[0]), n_shards)
         shards = []
         for s, ids in enumerate(parts):
@@ -330,6 +388,15 @@ class FilteredANNEngine:
             c, m = self.cat[ids], self.num[ids]
             lists = min(n_lists or max(1, int(np.sqrt(ids.size))), ids.size)
             ivf = IVFIndex(v, lists, seed=self.config.seed + s).build()
+            # per-shard attribute index + cache: bitmaps address shard-local
+            # row positions, so each shard compiles its own
+            ipre = None
+            if self.config.attr_index:
+                ipre = IndexedPreFilterExec(
+                    v, c, m,
+                    AttributeIndex.build(c, m, self.config.range_buckets),
+                    PredicateCache(self.config.pred_cache_size),
+                )
             shards.append(CorpusShard(
                 shard_id=s,
                 ids=ids,
@@ -338,15 +405,18 @@ class FilteredANNEngine:
                     ivf, c, m,
                     alpha0=self.config.alpha0, nprobe0=self.config.nprobe0,
                 ),
+                ipre_exec=ipre,
             ))
         return shards
 
     # ------------------------------------------------------------------
-    def query(self, q: np.ndarray, pred: Predicate, k: int = 10) -> PlannedResult:
+    def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         """Plan + execute one filtered ANN query."""
         q = np.atleast_2d(q)
         est, decision, plan_overhead = self.plan(pred, k)
-        if decision == PRE_FILTER:
+        if decision == INDEXED_PRE:
+            res = self.ipre_exec.search(q, pred, k)
+        elif decision == PRE_FILTER:
             res = self.pre_exec.search(q, pred, k)
         else:
             # the estimate also *parameterises* the chosen executor
@@ -355,7 +425,7 @@ class FilteredANNEngine:
         return PlannedResult(res, est, decision, plan_overhead)
 
     def batch_query(
-        self, queries: np.ndarray, preds: Sequence[Predicate], k: int = 10
+        self, queries: np.ndarray, preds: Sequence[AnyPredicate], k: int = 10
     ) -> List[PlannedResult]:
         """Batched plan -> group-by-decision -> execute.
 
@@ -376,13 +446,14 @@ class FilteredANNEngine:
         plan_share = plan_overhead / max(b, 1)
         t0 = time.perf_counter()
         d, ids, rounds = _execute_grouped(
-            self.pre_exec, self.post_exec, queries, preds, k, decisions, ests
+            self.pre_exec, self.ipre_exec, self.post_exec,
+            queries, preds, k, decisions, ests,
         )
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
         return package_results(d, ids, rounds, ests, decisions, share, plan_share)
 
     # ------------------------------------------------------------------
-    def ground_truth(self, q: np.ndarray, pred: Predicate, k: int = 10) -> np.ndarray:
+    def ground_truth(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> np.ndarray:
         mask = pred.eval(self.cat, self.num)
         _, ti = l2_topk(np.atleast_2d(q), self.vectors, k, mask)
         return np.asarray(ti)

@@ -1,10 +1,17 @@
 """Execution strategies for filtered ANN queries (paper §4.1 Methods).
 
-* :class:`PreFilterExec`  — filter first, brute-force exact KNN over the
-  passing subset (the paper implements pre-filtering with brute force; §4.1).
-* :class:`PostFilterExec` — search the global IVF index for α·k candidates,
-  filter, and double α (and widen nprobe) until ≥ k valid results survive.
-* :class:`AcornExec`      — ACORN-1: filter *during* graph traversal.
+* :class:`PreFilterExec`        — filter first, brute-force exact KNN over
+  the passing subset (the paper implements pre-filtering with brute force;
+  §4.1).  The predicate mask comes from an O(N·leaves) columnar scan.
+* :class:`IndexedPreFilterExec` — the same exact subset top-k, but the mask
+  comes from the bitmap attribute index (``repro.filter``): compiled DNF
+  bitmaps, LRU-cached across serving traffic, expanded to the bool mask the
+  kernels consume.  Identical results to :class:`PreFilterExec` by
+  construction (same mask, same execution core), minus the scan.
+* :class:`PostFilterExec`       — search the global IVF index for α·k
+  candidates, filter, and double α (and widen nprobe) until ≥ k valid
+  results survive.
+* :class:`AcornExec`            — ACORN-1: filter *during* graph traversal.
 
 All return ``SearchResult`` with global ids (-1 padded), squared-L2
 distances, wall time, and strategy bookkeeping used to label planner
@@ -22,10 +29,17 @@ from ..index.acorn import AcornIndex
 from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
 from ..kernels.ops import fused_masked_topk
-from .predicates import Predicate
+from .predicates import AnyPredicate
 from .util import next_pow2
 
-__all__ = ["SearchResult", "PreFilterExec", "PostFilterExec", "AcornExec", "recall_at_k"]
+__all__ = [
+    "SearchResult",
+    "PreFilterExec",
+    "IndexedPreFilterExec",
+    "PostFilterExec",
+    "AcornExec",
+    "recall_at_k",
+]
 
 
 @dataclasses.dataclass
@@ -53,42 +67,81 @@ def recall_at_k(result_ids: np.ndarray, truth_ids: np.ndarray) -> float:
 
 
 class PreFilterExec:
-    """Filter -> brute-force KNN over the subset (100 % recall)."""
+    """Filter -> brute-force KNN over the subset (100 % recall).
+
+    The mask-to-top-k core (:meth:`search_masked`) is shared with
+    :class:`IndexedPreFilterExec` — the two strategies differ ONLY in how
+    the candidate mask is produced (columnar scan vs compiled bitmap), so
+    their results are identical by construction.
+    """
+
+    strategy_name = "pre"
+    # Above this passing fraction, gathering the subset costs more than it
+    # saves: run the fused masked top-k over the FULL corpus instead (no
+    # copy, and the warmed full-corpus shape) — the "bitmap-masked fused
+    # top-k" large-set path.  Below it, gather + pow2-padded subset scan.
+    FULL_SCAN_FRAC = 0.25
 
     def __init__(self, vectors: np.ndarray, cat: np.ndarray, num: np.ndarray):
         self.vectors = np.ascontiguousarray(vectors, np.float32)
         self.cat, self.num = cat, num
 
-    def search(self, queries: np.ndarray, pred: Predicate, k: int) -> SearchResult:
+    def candidate_mask(self, pred: AnyPredicate) -> np.ndarray:
+        """(N,) bool predicate mask — the columnar scan."""
+        return pred.eval(self.cat, self.num)
+
+    def search(self, queries: np.ndarray, pred: AnyPredicate, k: int) -> SearchResult:
         t0 = time.perf_counter()
-        mask = pred.eval(self.cat, self.num)
-        idx = np.nonzero(mask)[0]
+        mask = self.candidate_mask(pred)
+        return self.search_masked(queries, mask, k, t0=t0)
+
+    def search_masked(
+        self, queries: np.ndarray, mask: np.ndarray, k: int,
+        t0: Optional[float] = None,
+    ) -> SearchResult:
+        """Exact subset top-k under a precomputed candidate mask."""
+        if t0 is None:
+            t0 = time.perf_counter()
         b = queries.shape[0]
-        if idx.size == 0:
+        n = self.vectors.shape[0]
+        n_pass = int(mask.sum())
+        if n_pass == 0:
             return SearchResult(
                 np.full((b, k), np.inf, np.float32),
                 np.full((b, k), -1, np.int32),
                 time.perf_counter() - t0,
-                "pre",
+                self.strategy_name,
             )
-        # pad the compacted subset to the next power of two so the jit'd
-        # top-k sees O(log N) distinct shapes, not one per query (otherwise
-        # recompilation time pollutes the utility labels the planner learns
-        # from).  The query batch pads the same way (floor 8): the batched
-        # serving path stacks all queries sharing a predicate into ONE fused
-        # call, and pow2 query shapes keep the compile set O(log B) — with
-        # the floor making single-query and small-group calls share one
-        # shape (identical per-row results by construction).
-        n_pass = idx.size
-        p = next_pow2(n_pass, floor=16)
         bp = next_pow2(b, floor=8)
+        qp = np.zeros((bp, self.vectors.shape[1]), np.float32)
+        qp[:b] = np.asarray(queries, np.float32)
+        kk = min(k, n_pass)
+        if n_pass > self.FULL_SCAN_FRAC * n:
+            # large passing set: masked fused top-k over the whole corpus —
+            # ids come back global already
+            d, gids = fused_masked_topk(qp, self.vectors, mask, kk)
+            d, gids = np.asarray(d)[:b], np.asarray(gids)[:b]
+            ids = np.full((b, k), -1, np.int32)
+            dist = np.full((b, k), np.inf, np.float32)
+            valid = gids >= 0
+            ids[:, :kk] = np.where(valid, gids, -1)
+            dist[:, :kk] = np.where(valid, d, np.inf)
+            return SearchResult(dist, ids, time.perf_counter() - t0, self.strategy_name)
+        # small passing set: gather the compacted subset, padded to the next
+        # power of two so the jit'd top-k sees O(log N) distinct shapes, not
+        # one per query (otherwise recompilation time pollutes the utility
+        # labels the planner learns from).  The query batch pads the same way
+        # (floor 8): the batched serving path stacks all queries sharing a
+        # predicate into ONE fused call, and pow2 query shapes keep the
+        # compile set O(log B) — with the floor making single-query and
+        # small-group calls share one shape (identical per-row results by
+        # construction).
+        idx = np.nonzero(mask)[0]
+        p = next_pow2(n_pass, floor=16)
         sub = np.zeros((p, self.vectors.shape[1]), np.float32)
         sub[:n_pass] = self.vectors[idx]
         valid_rows = np.zeros(p, bool)
         valid_rows[:n_pass] = True
-        qp = np.zeros((bp, self.vectors.shape[1]), np.float32)
-        qp[:b] = np.asarray(queries, np.float32)
-        kk = min(k, n_pass)
         d, local = fused_masked_topk(qp, sub, valid_rows, kk)
         d, local = np.asarray(d)[:b], np.asarray(local)[:b]
         ids = np.full((b, k), -1, np.int32)
@@ -96,7 +149,36 @@ class PreFilterExec:
         valid = local >= 0
         ids[:, :kk] = np.where(valid, idx[np.minimum(np.maximum(local, 0), n_pass - 1)], -1)
         dist[:, :kk] = np.where(valid, d, np.inf)
-        return SearchResult(dist, ids, time.perf_counter() - t0, "pre")
+        return SearchResult(dist, ids, time.perf_counter() - t0, self.strategy_name)
+
+
+class IndexedPreFilterExec(PreFilterExec):
+    """Pre-filtering with the candidate mask answered by the bitmap
+    attribute index instead of a columnar scan (``repro.filter``).
+
+    The compiled-bitmap cache is shared with the engine's selectivity
+    estimator, so a predicate that was planned (exact popcount selectivity)
+    executes from the same compilation; repeated serving predicates skip
+    compilation AND mask expansion (both cached).  Predicates whose leaves
+    reference unindexed attributes fall back to the scan — same answer,
+    scan price.
+    """
+
+    strategy_name = "ipre"
+
+    def __init__(self, vectors: np.ndarray, cat: np.ndarray, num: np.ndarray,
+                 index, cache):
+        super().__init__(vectors, cat, num)
+        self.index = index          # repro.filter.AttributeIndex
+        self.cache = cache          # repro.filter.PredicateCache
+
+    def candidate_mask(self, pred: AnyPredicate) -> np.ndarray:
+        if self.index is not None and self.index.covers(pred):
+            # two-tier cache: compiled words (capacity) + a smaller LRU of
+            # expanded masks (mask_capacity), so repeat predicates skip both
+            # compilation and expansion without pinning a mask per entry
+            return self.cache.mask(pred, self.index)
+        return pred.eval(self.cat, self.num)
 
 
 class PostFilterExec:
@@ -141,7 +223,7 @@ class PostFilterExec:
     def search(
         self,
         queries: np.ndarray,
-        pred: Predicate,
+        pred: AnyPredicate,
         k: int,
         est_selectivity: Optional[float] = None,
     ) -> SearchResult:
@@ -158,7 +240,7 @@ class PostFilterExec:
     def search_rows(
         self,
         q: np.ndarray,
-        preds: Sequence[Predicate],
+        preds: Sequence[AnyPredicate],
         k: int,
         ests: Sequence[Optional[float]],
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -236,7 +318,7 @@ class AcornExec:
         self.cat, self.num = cat, num
         self.ef = ef
 
-    def search(self, queries: np.ndarray, pred: Predicate, k: int) -> SearchResult:
+    def search(self, queries: np.ndarray, pred: AnyPredicate, k: int) -> SearchResult:
         t0 = time.perf_counter()
         mask = pred.eval(self.cat, self.num)
         d, ids = self.index.search(np.asarray(queries, np.float32), k, ef=self.ef, mask=mask)

@@ -6,6 +6,15 @@ with Adam (lr 1e-3), batch size 200, up to 500 epochs, L2 regularisation and
 early stopping; the L2 strength is grid-searched with cross-validated
 ROC-AUC as the objective (paper's "small grid search").
 
+On top of the learned 2-way head, :meth:`CorePlanner.decide` is **3-way**:
+queries the head routes to pre-filtering are promoted to INDEXED_PRE (2)
+when the predicate is covered by the corpus's attribute index (the
+``sel_is_exact`` feature) — a cost-heuristic calibration rather than a
+retrained head, because covered bitmap evaluation (O(N/32) word ops per
+leaf, ~free on a predicate-cache hit) strictly dominates the O(N·leaves)
+columnar scan that plain pre-filtering pays, while the downstream top-k is
+identical.  The pre-vs-post boundary the head learned is untouched.
+
 Pure JAX (no flax/optax available offline): params are a pytree dict, the
 update step is jit-compiled, inference is one fused matmul chain — the
 "minimal inference overhead" property the paper claims.
@@ -24,10 +33,15 @@ from .predicates import Predicate
 from .stats import DatasetStats
 from .util import next_pow2
 
-__all__ = ["CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER", "roc_auc"]
+__all__ = [
+    "CorePlanner", "PlannerFeatures",
+    "PRE_FILTER", "POST_FILTER", "INDEXED_PRE",
+    "roc_auc",
+]
 
 PRE_FILTER = 0
 POST_FILTER = 1
+INDEXED_PRE = 2     # pre-filter via the bitmap attribute index (repro.filter)
 
 _HIDDEN = (64, 32)   # paper §3.3
 _EPOCHS = 500
@@ -69,9 +83,12 @@ class PlannerFeatures:
 
     stats: DatasetStats
 
-    N_FEATURES = 9
+    N_FEATURES = 10
+    SEL_COL = 3          # estimated selectivity
+    SEL_EXACT_COL = 9    # 1.0 when the estimate is an exact index popcount
 
-    def vector(self, pred: Predicate, est_sel: float, k: int) -> np.ndarray:
+    def vector(self, pred: Predicate, est_sel: float, k: int,
+               sel_exact: bool = False) -> np.ndarray:
         st = self.stats
         kind_onehot = {"label": (1, 0, 0), "range": (0, 1, 0), "mixed": (0, 0, 1)}[pred.kind]
         return np.array(
@@ -83,13 +100,15 @@ class PlannerFeatures:
                 np.log10(est_sel + 1e-6),        # log-scale selectivity
                 np.log2(max(k, 1)),              # requested k
                 *kind_onehot,                    # predicate type
+                float(sel_exact),                # exact index-backed selectivity?
             ],
             dtype=np.float32,
         )
 
     _KIND_COL = {"label": 6, "range": 7, "mixed": 8}
 
-    def matrix(self, preds: Sequence[Predicate], est_sels: np.ndarray, k: int) -> np.ndarray:
+    def matrix(self, preds: Sequence[Predicate], est_sels: np.ndarray, k: int,
+               sel_exact: Optional[np.ndarray] = None) -> np.ndarray:
         """Batched :meth:`vector`: one (B, F) matrix, row i == vector(preds[i]).
 
         Dataset-level features broadcast; selectivity features compute in
@@ -107,6 +126,8 @@ class PlannerFeatures:
         f[:, 5] = np.log2(max(k, 1))
         for i, p in enumerate(preds):
             f[i, self._KIND_COL[p.kind]] = 1.0
+        if sel_exact is not None:
+            f[:, self.SEL_EXACT_COL] = np.asarray(sel_exact, np.float32)
         return f
 
 
@@ -159,10 +180,21 @@ class CorePlanner:
 
     def __init__(self, n_features: int = PlannerFeatures.N_FEATURES, seed: int = 0):
         self.n_features = n_features
+        # The learned head sees every feature EXCEPT the sel_is_exact flag,
+        # which only drives the indexed-pre promotion in :meth:`decide`.
+        # Keeping it out of the MLP (a) guarantees the promotion can never
+        # shift the learned pre-vs-post boundary and (b) avoids feeding the
+        # net a column that is constant on fully-indexed corpora (whose
+        # near-zero std would explode under feature normalisation the moment
+        # an uncovered predicate arrives).
+        self._head_cols = [
+            i for i in range(n_features) if i != PlannerFeatures.SEL_EXACT_COL
+        ]
+        self.n_head = len(self._head_cols)
         self.seed = seed
         self.params: Optional[Dict[str, jax.Array]] = None
-        self.mu = np.zeros(n_features, np.float32)
-        self.sigma = np.ones(n_features, np.float32)
+        self.mu = np.zeros(self.n_head, np.float32)
+        self.sigma = np.ones(self.n_head, np.float32)
         self.best_l2_: float = 1e-4
         self.val_auc_: float = 0.5
         self._predict_jit = jax.jit(lambda p, x: jax.nn.softmax(_logits(p, x))[:, 1])
@@ -170,7 +202,7 @@ class CorePlanner:
     # ------------------------------------------------------------------
     def _train_once(self, x, y, l2, seed, val_x=None, val_y=None):
         key = jax.random.PRNGKey(seed)
-        params = _init_params(key, self.n_features)
+        params = _init_params(key, self.n_head)
         m = jax.tree.map(jnp.zeros_like, params)
         v = jax.tree.map(jnp.zeros_like, params)
         opt_state = (m, v)
@@ -206,7 +238,7 @@ class CorePlanner:
         l2_grid: Sequence[float] = (1e-4, 1e-3),
         n_folds: int = 2,
     ) -> "CorePlanner":
-        x = np.asarray(features, np.float32)
+        x = np.asarray(features, np.float32)[:, self._head_cols]
         y = np.asarray(labels, np.int32)
         self.mu = x.mean(0)
         self.sigma = x.std(0) + 1e-6
@@ -256,7 +288,8 @@ class CorePlanner:
         shapes, not one per batch size.
         """
         assert self.params is not None, "planner not trained"
-        x = (np.atleast_2d(features).astype(np.float32) - self.mu) / self.sigma
+        x = np.atleast_2d(features).astype(np.float32)[:, self._head_cols]
+        x = (x - self.mu) / self.sigma
         b = x.shape[0]
         bp = next_pow2(b)
         if bp != b:
@@ -264,5 +297,23 @@ class CorePlanner:
         return np.asarray(self._predict_jit(self.params, jnp.asarray(x)))[:b]
 
     def decide(self, features: np.ndarray) -> np.ndarray:
-        """0 = pre-filter, 1 = post-filter, per query row."""
-        return (self.predict_proba(features) >= 0.5).astype(np.int32)
+        """3-way decision per query row: 0 = pre-filter (columnar scan),
+        1 = post-filter, 2 = indexed pre-filter.
+
+        The learned head stays 2-way (it was trained on pre-vs-post utility
+        labels); the third plan is a cost-heuristic promotion on top: a row
+        the head sends to pre-filtering runs INDEXED_PRE whenever its
+        predicate is index-covered (``sel_is_exact`` feature set).  The
+        calibration is the word-parallelism argument — a covered bitmap
+        combine costs ~N/32 word ops per leaf (amortised to ~0 on a
+        predicate-cache hit) versus the scan's ~N element compares per leaf,
+        and both plans then run the identical subset top-k — so coverage
+        alone decides, and the promotion can never flip pre vs post."""
+        x = np.atleast_2d(np.asarray(features, np.float32))
+        base = (self.predict_proba(x) >= 0.5).astype(np.int32)
+        if x.shape[1] <= PlannerFeatures.SEL_EXACT_COL:
+            return base                      # legacy feature layout: 2-way only
+        promote = (base == PRE_FILTER) & (
+            x[:, PlannerFeatures.SEL_EXACT_COL] >= 0.5
+        )
+        return np.where(promote, INDEXED_PRE, base).astype(np.int32)

@@ -1,12 +1,21 @@
-"""Selectivity estimation (paper §3.2).
+"""Selectivity estimation (paper §3.2, plus the exact index fast path).
 
-Routing (faithful to the paper):
+Routing:
 
+* index-covered predicate        -> EXACT popcount selectivity from the
+                                    compiled bitmap (repro.filter); no model,
+                                    no histogram — the estimate IS the truth,
+                                    and the planner features record it as
+                                    ``sel_is_exact``.
 * pure range predicate           -> histogram estimate only (no model)
 * single label                   -> exact frequency-dictionary lookup
 * two-label conjunction          -> exact 2-D co-occurrence lookup
 * >=3 labels, or mixed label+range -> GBM over lightweight features, with
   range features short-circuited to zero for label-only predicates.
+* DNF (``Or``) without an index  -> independence union of per-term
+  estimates, ``1 - prod(1 - s_t)``.
+* negated leaves without an index -> positive-part estimate scaled by
+  ``prod(1 - s_leaf)`` under independence.
 
 Feature vector fed to the GBM (paper §3.2.1 + §3.2.3):
   0: independence-assumption selectivity           (product of marginals)
@@ -22,12 +31,12 @@ Feature vector fed to the GBM (paper §3.2.1 + §3.2.3):
 from __future__ import annotations
 
 from itertools import combinations
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from .gbm import GradientBoostingRegressor
-from .predicates import Predicate, label_ids
+from .predicates import LabelEq, Or, Predicate, label_ids
 from .stats import DatasetStats
 
 __all__ = ["SelectivityEstimator", "N_FEATURES"]
@@ -36,10 +45,14 @@ N_FEATURES = 9
 
 
 class SelectivityEstimator:
-    """Estimates predicate selectivity from precomputed dataset statistics."""
+    """Estimates predicate selectivity from precomputed dataset statistics,
+    with an exact bitmap-index fast path when an ``AttributeIndex`` (and
+    optionally a shared ``PredicateCache``) is attached."""
 
-    def __init__(self, stats: DatasetStats):
+    def __init__(self, stats: DatasetStats, index=None, cache=None):
         self.stats = stats
+        self.index = index          # Optional[repro.filter.AttributeIndex]
+        self.cache = cache          # Optional[repro.filter.PredicateCache]
         self.model: Optional[GradientBoostingRegressor] = None
 
     # ------------------------------------------------------------------
@@ -85,12 +98,19 @@ class SelectivityEstimator:
     def fit(self, preds: Sequence[Predicate], true_sel: Sequence[float]) -> "SelectivityEstimator":
         """Train the GBM refinement on (predicate, ground-truth selectivity)
         pairs — in the paper these ground truths come from the same training
-        queries used for the planner, measured on the sampled subset."""
-        rows = [self.features(p) for p in preds]
-        if not rows:
+        queries used for the planner, measured on the sampled subset.
+
+        The GBM only ever *serves* conjunctive predicates (DNF ``Or``
+        shapes route through the exact index or the independence union,
+        never the model), so ``Or`` entries in the training pool are
+        skipped rather than crashing feature extraction."""
+        pairs = [
+            (p, s) for p, s in zip(preds, true_sel) if isinstance(p, Predicate)
+        ]
+        if not pairs:
             return self
-        x = np.stack(rows)
-        y = np.asarray(true_sel, dtype=np.float64)
+        x = np.stack([self.features(p) for p, _ in pairs])
+        y = np.asarray([s for _, s in pairs], dtype=np.float64)
         # Predict in logit space for stability near 0.
         eps = 1e-6
         z = np.log((y + eps) / (1 - y + eps))
@@ -98,11 +118,54 @@ class SelectivityEstimator:
         return self
 
     # ------------------------------------------------------------------
-    def _route(self, pred: Predicate):
-        """Shared routing for estimate/estimate_batch: returns a direct
-        ``("value", s)`` estimate, or ``("gbm", features)`` when the predicate
-        needs the model (so a batch can pool its GBM rows into one predict)."""
+    def _exact_sel(self, pred) -> float:
+        """Exact selectivity from the compiled bitmap's popcount; shares the
+        engine-wide predicate cache so plan-then-execute compiles once."""
+        if self.cache is not None:
+            return self.cache.get_or_compile(pred, self.index).selectivity
+        return self.index.compile(pred).selectivity
+
+    def _leaf_sel(self, term) -> float:
+        """Marginal selectivity of one leaf (for independence corrections)."""
         st = self.stats
+        if isinstance(term, LabelEq):
+            # out-of-dictionary codes match nothing; the card bound also
+            # stops a too-large code aliasing into the NEXT attribute's
+            # global-id span
+            if not (0 <= term.attr < len(st.cat_cards)):
+                return 0.0
+            if not (0 <= term.code < st.cat_cards[term.attr]):
+                return 0.0
+            return st.single_label_sel(st.cat_offsets[term.attr] + term.code)
+        return st.range_sel(term)
+
+    def _route(self, pred):
+        """Shared routing for estimate/estimate_batch: returns an
+        ``("exact", s)`` index-backed truth, a direct ``("value", s)``
+        estimate, or ``("gbm", features)`` when the predicate needs the
+        model (so a batch can pool its GBM rows into one predict)."""
+        st = self.stats
+
+        # exact fast path: an index that covers every leaf answers ANY DNF
+        # shape with a popcount — bypassing histograms and the GBM entirely
+        if self.index is not None and self.index.covers(pred):
+            return "exact", self._exact_sel(pred)
+
+        if isinstance(pred, Or):
+            # no index: independence union of the term estimates
+            s = 1.0
+            for t in pred.terms:
+                s *= 1.0 - self.estimate(t)
+            return "value", float(np.clip(1.0 - s, 0.0, 1.0))
+
+        if pred.nots:
+            # negated leaves scale the positive part under independence
+            pos = Predicate(labels=pred.labels, ranges=pred.ranges)
+            s = self.estimate(pos)
+            for nt in pred.nots:
+                s *= 1.0 - self._leaf_sel(nt.term)
+            return "value", float(np.clip(s, 0.0, 1.0))
+
         lbls = label_ids(pred, st.cat_offsets)
 
         if pred.kind == "range":
@@ -124,26 +187,39 @@ class SelectivityEstimator:
             return "value", float(np.clip(st.independence_sel(pred), 0.0, 1.0))
         return "gbm", self.features(pred)
 
-    def estimate(self, pred: Predicate) -> float:
+    def estimate_ex(self, pred) -> Tuple[float, bool]:
+        """``(estimated selectivity, sel_is_exact)`` — the flag is True only
+        on the index-covered popcount path, where the value is ground truth
+        rather than an estimate."""
         kind, payload = self._route(pred)
+        if kind == "exact":
+            return payload, True
         if kind == "value":
-            return payload
+            return payload, False
         z = float(self.model.predict(payload[None, :])[0])
-        return float(np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0))
+        return float(np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0)), False
 
-    def estimate_batch(self, preds: Sequence[Predicate]) -> np.ndarray:
-        """Vectorised ``estimate`` over a batch of predicates.
+    def estimate(self, pred) -> float:
+        return self.estimate_ex(pred)[0]
+
+    def estimate_batch_ex(self, preds: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorised ``estimate_ex`` over a batch of predicates.
 
         Exact/histogram routes resolve directly; all GBM-routed predicates
         share ONE ``model.predict`` over a stacked (B_gbm, F) feature matrix.
         Per-row tree traversal is row-independent, so results are identical
-        to B independent :meth:`estimate` calls.
+        to B independent :meth:`estimate` calls.  Returns
+        ``(estimates (B,), sel_is_exact flags (B,) bool)``.
         """
         out = np.zeros(len(preds), dtype=np.float64)
+        exact = np.zeros(len(preds), dtype=bool)
         gbm_rows, gbm_idx = [], []
         for i, pred in enumerate(preds):
             kind, payload = self._route(pred)
-            if kind == "value":
+            if kind == "exact":
+                out[i] = payload
+                exact[i] = True
+            elif kind == "value":
                 out[i] = payload
             else:
                 gbm_rows.append(payload)
@@ -151,4 +227,7 @@ class SelectivityEstimator:
         if gbm_rows:
             z = self.model.predict(np.stack(gbm_rows))
             out[gbm_idx] = np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0)
-        return out
+        return out, exact
+
+    def estimate_batch(self, preds: Sequence) -> np.ndarray:
+        return self.estimate_batch_ex(preds)[0]

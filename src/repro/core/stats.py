@@ -225,10 +225,19 @@ class DatasetStats:
         return h.selectivity(r.intervals) * self.single_label_sel(lbl)
 
     def independence_sel(self, pred: Predicate) -> float:
-        """Selectivity assuming all conjuncts independent."""
+        """Selectivity assuming all conjuncts independent (negated leaves
+        contribute their complement's marginal)."""
         s = 1.0
         for lbl in label_ids(pred, self.cat_offsets):
             s *= self.single_label_sel(lbl)
         for r in pred.ranges:
             s *= self.range_sel(r)
+        for nt in pred.nots:
+            if isinstance(nt.term, RangePred):
+                s *= 1.0 - self.range_sel(nt.term)
+            elif (0 <= nt.term.attr < len(self.cat_cards)
+                  and 0 <= nt.term.code < self.cat_cards[nt.term.attr]):
+                s *= 1.0 - self.single_label_sel(self.cat_offsets[nt.term.attr] + nt.term.code)
+            # else: the label matches nothing, so its negation has
+            # selectivity 1 — no factor
         return s

@@ -59,8 +59,9 @@ def test_sharded_matches_unsharded(small_system):
         assert r0.decision == r1.decision
         gt = set(eng.ground_truth(tq[i], tp[i], k=10)[0].tolist()) - {-1}
         got = set(r1.result.ids[0].tolist()) - {-1}
-        if r0.decision == 0:
-            # PRE_FILTER is exact on both paths: must equal ground truth
+        if r0.decision in (0, 2):
+            # PRE_FILTER / INDEXED_PRE are exact on both paths: must equal
+            # ground truth
             assert got == set(r0.result.ids[0].tolist()) - {-1} == gt
         else:
             # POST_FILTER probes different candidate sets per shard, so the

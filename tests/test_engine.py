@@ -5,6 +5,7 @@ import pytest
 from repro.core import (
     EngineConfig,
     FilteredANNEngine,
+    INDEXED_PRE,
     POST_FILTER,
     PRE_FILTER,
     recall_at_k,
@@ -50,7 +51,7 @@ def test_decisions_vary_with_selectivity(engine):
         ds.vectors, ds.cat, ds.num, 30, kinds=("range",), sel_range=(0.005, 0.4), seed=9
     )
     decisions = [eng.query(qs[i], p, k=10).decision for i, p in enumerate(preds)]
-    assert set(decisions) <= {PRE_FILTER, POST_FILTER}
+    assert set(decisions) <= {PRE_FILTER, POST_FILTER, INDEXED_PRE}
 
 
 def test_post_filter_expansion_fills_k(engine):

@@ -1,0 +1,435 @@
+"""repro.filter: bitmap/range indexes, DNF compiler, cache, indexed pre-filter.
+
+Two layers of coverage:
+
+* deterministic randomized suites (always run) asserting compiled-bitmap
+  evaluation ≡ naive ``eval`` over random DNF predicates — including
+  NULL_CODE rows, empty intervals, full-true/full-false masks — plus
+  popcount ≡ ``mask.sum()``, cache semantics, and executor equivalence
+  (indexed pre-filter results identical to the scan-based pre-filter, flat
+  AND sharded);
+* a hypothesis property suite (skipped when hypothesis is absent) fuzzing
+  the same invariant over arbitrary corpora/predicates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    FilteredANNEngine,
+    INDEXED_PRE,
+    LabelEq,
+    Not,
+    Or,
+    POST_FILTER,
+    PRE_FILTER,
+    Predicate,
+    RangePred,
+)
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+from repro.filter import (
+    AttributeIndex,
+    PredicateCache,
+    canonical_key,
+    expand_words,
+    pack_mask,
+    popcount_words,
+    words_from_ids,
+)
+
+K = 10
+
+
+# ----------------------------------------------------------------------
+# bitmap primitives
+# ----------------------------------------------------------------------
+def test_pack_expand_roundtrip_and_popcount():
+    rng = np.random.default_rng(0)
+    for n in (0, 1, 31, 32, 33, 1000, 4097):
+        m = rng.random(n) < 0.3
+        w = pack_mask(m)
+        assert (expand_words(w, n) == m).all()
+        assert popcount_words(w) == int(m.sum())
+        # bit addressing agrees between the packer and the id-setter
+        assert (words_from_ids(np.flatnonzero(m), n) == w).all()
+
+
+# ----------------------------------------------------------------------
+# random-DNF equivalence (deterministic)
+# ----------------------------------------------------------------------
+def _rand_corpus(rng, n):
+    cat = rng.integers(-1, 6, size=(n, 3)).astype(np.int32)  # incl. NULL_CODE
+    num = np.round(rng.normal(0, 5, size=(n, 2)), 1).astype(np.float32)  # many ties
+    return cat, num
+
+
+def _rand_leaf(rng):
+    if rng.random() < 0.5:
+        return LabelEq(int(rng.integers(3)), int(rng.integers(-1, 7)))
+    attr = int(rng.integers(2))
+    ivs = []
+    for _ in range(int(rng.integers(1, 3))):
+        lo = float(rng.normal(0, 5))
+        hi = lo + float(rng.exponential(4)) - (2.0 if rng.random() < 0.2 else 0.0)
+        ivs.append((lo, hi))   # sometimes empty (hi <= lo)
+    return RangePred(attr, tuple(ivs))
+
+
+def _rand_conj(rng):
+    leaves = [_rand_leaf(rng) for _ in range(int(rng.integers(1, 4)))]
+    return Predicate(
+        labels=tuple(l for l in leaves if isinstance(l, LabelEq)),
+        ranges=tuple(l for l in leaves if isinstance(l, RangePred)),
+        nots=tuple(Not(_rand_leaf(rng)) for _ in range(int(rng.integers(0, 2)))),
+    )
+
+
+def _rand_dnf(rng):
+    if rng.random() < 0.5:
+        return _rand_conj(rng)
+    return Or(tuple(_rand_conj(rng) for _ in range(int(rng.integers(0, 4)))))
+
+
+def test_compiled_bitmap_equals_naive_eval():
+    rng = np.random.default_rng(1)
+    cat, num = _rand_corpus(rng, 4003)
+    index = AttributeIndex.build(cat, num)
+    cache = PredicateCache(capacity=64)
+    pool = [_rand_dnf(rng) for _ in range(150)]
+    pool += [Predicate(), Or(())]                  # full-true / full-false
+    pool += [Predicate(ranges=(RangePred(0, ((1e9, 2e9),)),))]  # empty range
+    for p in pool:
+        ref = p.eval(cat, num)
+        assert index.covers(p)
+        c = cache.get_or_compile(p, index)
+        assert (c.mask() == ref).all(), str(p)
+        assert c.popcount == int(ref.sum()), str(p)
+        assert c.selectivity == pytest.approx(float(ref.mean()), abs=0)
+
+
+def test_compile_matches_on_null_and_negation():
+    cat = np.array([[0], [1], [-1], [1], [-1]], np.int32)
+    num = np.zeros((5, 1), np.float32)
+    index = AttributeIndex.build(cat, num)
+    # explicit NULL query and negation both include/exclude NULL rows exactly
+    for p in (
+        Predicate(labels=(LabelEq(0, -1),)),
+        Predicate(nots=(Not(LabelEq(0, 1)),)),
+        Predicate(nots=(Not(LabelEq(0, -1)),)),
+        Predicate(labels=(LabelEq(0, 99),)),       # out-of-dictionary code
+    ):
+        assert (index.compile(p).mask() == p.eval(cat, num)).all(), str(p)
+
+
+# ----------------------------------------------------------------------
+# satellite regressions: interval merging + empty corpora
+# ----------------------------------------------------------------------
+def test_rangepred_merges_overlapping_intervals():
+    r = RangePred(0, ((0.0, 10.0), (5.0, 15.0)))
+    assert r.intervals == ((0.0, 15.0),)
+    assert r.total_width == 15.0                   # was 20 before the merge fix
+    # adjacency merges too (half-open intervals: [0,5) u [5,10) = [0,10))
+    assert RangePred(0, ((5.0, 10.0), (0.0, 5.0))).intervals == ((0.0, 10.0),)
+    # disjoint stays disjoint, sorted
+    assert RangePred(0, ((8.0, 9.0), (1.0, 2.0))).intervals == ((1.0, 2.0), (8.0, 9.0))
+    # empty intervals are dropped; an all-empty predicate matches nothing
+    r = RangePred(0, ((3.0, 3.0), (7.0, 5.0)))
+    assert r.intervals == () and r.total_width == 0.0 and r.midpoint == 0.0
+    num = np.arange(10, dtype=np.float32)[:, None]
+    assert not r.eval(np.zeros((10, 0), np.int32), num).any()
+
+
+def test_eval_on_empty_and_degenerate_corpora():
+    p_lbl = Predicate(labels=(LabelEq(0, 1),))
+    p_rng = Predicate(ranges=(RangePred(0, ((0.0, 1.0),)),))
+    # N = 0 with attribute columns
+    cat0, num0 = np.zeros((0, 3), np.int32), np.zeros((0, 2), np.float32)
+    for p in (Predicate(), p_lbl, p_rng, Or((p_lbl, p_rng))):
+        m = p.eval(cat0, num0)
+        assert m.shape == (0,) and m.dtype == bool
+        assert p.selectivity(cat0, num0) == 0.0
+    # N > 0 but zero-column cat AND a 1-D empty num (the old n-derivation
+    # read num.shape[0] == 0 and returned a wrongly-shaped mask)
+    cat = np.zeros((7, 0), np.int32)
+    num = np.zeros((0,), np.float32)
+    assert Predicate().eval(cat, num).shape == (7,)
+    # and the mirrored case
+    assert Predicate().eval(np.zeros((0,), np.int32), np.zeros((7, 0), np.float32)).shape == (7,)
+    # fully empty corpus: shape (0,)
+    assert Predicate().eval(np.zeros((0,), np.int32), np.zeros((0,), np.float32)).shape == (0,)
+
+
+def test_float32_boundary_bounds_match_scan():
+    """Regression: bounds that are not float32-representable must quantise
+    exactly as the scan's weak promotion does.  x = float32(0.1) with
+    lo = 0.1000000015 rounds DOWN to x in float32 — the scan includes the
+    row, so the index must too (it compared in float64 before the fix)."""
+    num = np.array([[0.1], [0.25], [0.5]], np.float32)
+    cat = np.zeros((3, 0), np.int32)
+    index = AttributeIndex.build(cat, num)
+    for lo, hi in [(0.1000000015, 0.5000000001), (0.09999999999, 0.25000000001),
+                   (0.1, 0.25), (-1e300, 1e300)]:
+        p = Predicate(ranges=(RangePred(0, ((lo, hi),)),))
+        assert (index.compile(p).mask() == p.eval(cat, num)).all(), (lo, hi)
+
+
+def test_high_cardinality_column_left_unindexed():
+    """An ID-like categorical column (more distinct codes than
+    MAX_CODES_INDEXED) must not be bitmap-indexed — predicates touching it
+    report uncovered and fall back to the scan, instead of the build
+    allocating O(codes * N/8) bytes."""
+    from repro.filter.bitmap import MAX_CODES_INDEXED
+
+    n = MAX_CODES_INDEXED + 10
+    cat = np.stack([np.arange(n, dtype=np.int32),          # all-unique IDs
+                    np.zeros(n, np.int32)], axis=1)        # normal column
+    num = np.zeros((n, 1), np.float32)
+    index = AttributeIndex.build(cat, num)
+    assert not index.labels.indexed(0) and index.labels.indexed(1)
+    assert not index.covers(Predicate(labels=(LabelEq(0, 7),)))
+    assert index.covers(Predicate(labels=(LabelEq(1, 0),)))
+    # sparse code space: huge max code, few present codes -> still indexed
+    sparse = np.zeros((100, 1), np.int32)
+    sparse[1, 0] = 10**6
+    idx2 = AttributeIndex.build(sparse, np.zeros((100, 1), np.float32))
+    assert idx2.labels.indexed(0)
+    p = Predicate(labels=(LabelEq(0, 10**6),))
+    assert (idx2.compile(p).mask() == p.eval(sparse, np.zeros((100, 1), np.float32))).all()
+
+
+def test_cache_mask_tier_bounded():
+    """The expanded-mask tier holds at most mask_capacity entries; the
+    compiled-words tier is unaffected by mask evictions."""
+    rng = np.random.default_rng(3)
+    cat, num = _rand_corpus(rng, 256)
+    index = AttributeIndex.build(cat, num)
+    cache = PredicateCache(capacity=16, mask_capacity=2)
+    preds = [Predicate(labels=(LabelEq(0, c),)) for c in range(5)]
+    for p in preds:
+        m = cache.mask(p, index)
+        assert (m == p.eval(cat, num)).all()
+    s = cache.stats()
+    assert s["masks"] == 2 and s["size"] == 5
+    # re-expansion after mask eviction still agrees
+    assert (cache.mask(preds[0], index) == preds[0].eval(cat, num)).all()
+
+
+def test_attribute_index_on_empty_corpus():
+    index = AttributeIndex.build(np.zeros((0, 2), np.int32), np.zeros((0, 1), np.float32))
+    p = Predicate(labels=(LabelEq(0, 0),), ranges=(RangePred(0, ((0.0, 1.0),)),))
+    c = index.compile(p)
+    assert c.popcount == 0 and c.selectivity == 0.0 and c.mask().shape == (0,)
+
+
+# ----------------------------------------------------------------------
+# cache semantics
+# ----------------------------------------------------------------------
+def test_canonical_key_order_and_duplicates():
+    a, b = LabelEq(0, 1), LabelEq(1, 2)
+    assert canonical_key(Predicate(labels=(a, b))) == canonical_key(Predicate(labels=(b, a, a)))
+    t1, t2 = Predicate(labels=(a,)), Predicate(labels=(b,))
+    assert canonical_key(Or((t1, t2))) == canonical_key(Or((t2, t1, t1)))
+    assert canonical_key(Predicate(labels=(a,))) != canonical_key(Predicate(nots=(Not(a),)))
+
+
+def test_cache_hits_and_lru_eviction():
+    rng = np.random.default_rng(2)
+    cat, num = _rand_corpus(rng, 512)
+    index = AttributeIndex.build(cat, num)
+    cache = PredicateCache(capacity=2)
+    p1 = Predicate(labels=(LabelEq(0, 1),))
+    p2 = Predicate(labels=(LabelEq(0, 2),))
+    p3 = Predicate(labels=(LabelEq(0, 3),))
+    c1 = cache.get_or_compile(p1, index)
+    assert cache.get_or_compile(p1, index) is c1          # hit, same object
+    # logically-equal reconstruction hits the same line
+    assert cache.get_or_compile(Predicate(labels=(LabelEq(0, 1), LabelEq(0, 1))), index) is c1
+    cache.get_or_compile(p2, index)
+    cache.get_or_compile(p1, index)                       # p1 now most recent
+    cache.get_or_compile(p3, index)                       # evicts p2 (LRU)
+    assert cache.get_or_compile(p1, index) is c1
+    s = cache.stats()
+    assert s["size"] == 2 and s["evictions"] == 1
+    assert s["hits"] == 4 and s["misses"] == 3
+
+
+# ----------------------------------------------------------------------
+# executor + engine equivalence (the acceptance criterion)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    ds = make_dataset("arxiv", scale="4000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num, EngineConfig(n_lists=32, seed=0)
+    ).build()
+    return ds, eng
+
+
+def _predicate_pool(ds, n=18):
+    """Mixed pool spanning kinds and selectivities (incl. > FULL_SCAN_FRAC so
+    the bitmap-masked full-corpus branch is exercised), plus DNF shapes."""
+    _, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, n, kinds=ds.filter_kinds,
+        sel_range=(0.005, 0.5), seed=23,
+    )
+    x0 = ds.num[:, 0]
+    wide = Predicate(ranges=(RangePred(0, ((float(x0.min()) - 1.0, float(np.quantile(x0, 0.8))),)),))
+    dnf = Or((
+        Predicate(labels=(LabelEq(0, 0),)),
+        Predicate(ranges=(RangePred(1, ((float(np.quantile(ds.num[:, 1], 0.5)), float(np.quantile(ds.num[:, 1], 0.7))),)),),
+                  nots=(Not(LabelEq(1, 0)),)),
+    ))
+    return list(preds) + [wide, dnf, Predicate(), Or(())]
+
+
+def test_indexed_pre_identical_to_scan_pre_flat(engine):
+    ds, eng = engine
+    rng = np.random.default_rng(5)
+    for i, p in enumerate(_predicate_pool(ds)):
+        q = ds.vectors[rng.integers(ds.n)][None]
+        a = eng.pre_exec.search(q, p, K)
+        b = eng.ipre_exec.search(q, p, K)
+        assert np.array_equal(a.ids, b.ids), f"pool[{i}] ids differ: {p}"
+        assert np.array_equal(a.dists, b.dists), f"pool[{i}] dists differ: {p}"
+
+
+def test_indexed_pre_identical_to_scan_pre_sharded(engine):
+    ds, eng = engine
+    rng = np.random.default_rng(7)
+    shards = eng.shard_corpus(3)
+    for p in _predicate_pool(ds, n=8):
+        q = ds.vectors[rng.integers(ds.n)][None]
+        for s in shards:
+            a = s.search(q, p, K, PRE_FILTER)
+            b = s.search(q, p, K, INDEXED_PRE)
+            assert np.array_equal(a.ids, b.ids), f"shard {s.shard_id}: {p}"
+            assert np.array_equal(a.dists, b.dists), f"shard {s.shard_id}: {p}"
+
+
+def test_estimator_exact_path(engine):
+    ds, eng = engine
+    for p in _predicate_pool(ds, n=10):
+        est, exact = eng.estimator.estimate_ex(p)
+        assert exact
+        assert est == pytest.approx(p.selectivity(ds.cat, ds.num), abs=0)
+
+
+def test_engine_three_way_plan_and_dnf_end_to_end(engine):
+    ds, eng = engine
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 12, kinds=ds.filter_kinds,
+        sel_range=(0.005, 0.4), seed=31,
+    )
+    pool = list(preds) + [_predicate_pool(ds, n=4)[-3]]   # include the DNF
+    q = np.stack([qs[i % len(qs)] for i in range(len(pool))])
+    batched = eng.batch_query(q, pool, k=K)
+    decisions = {r.decision for r in batched}
+    # untrained planner falls back to the calibrated heuristic: covered
+    # low-selectivity predicates run INDEXED_PRE, high selectivity POST;
+    # plain PRE only appears for uncovered predicates (none here)
+    assert INDEXED_PRE in decisions and POST_FILTER in decisions
+    for i, r in enumerate(batched):
+        single = eng.query(q[i], pool[i], k=K)
+        assert single.decision == r.decision
+        assert np.array_equal(single.result.ids, r.result.ids)
+        ids = r.result.ids[r.result.ids >= 0]
+        if ids.size:
+            assert pool[i].eval(ds.cat[ids], ds.num[ids]).all()
+        if r.decision == INDEXED_PRE:
+            assert r.result.strategy == "ipre"
+
+
+def test_estimator_fit_tolerates_dnf_and_wild_codes(engine):
+    """Regression: a training pool containing Or predicates (which the GBM
+    never serves) must not crash estimator.fit, and independence features
+    must guard out-of-dictionary codes in negated leaves instead of
+    indexing a neighbouring attribute's frequency span."""
+    ds, eng = engine
+    _, preds, sels = gen_queries(
+        ds.vectors, ds.cat, ds.num, 12, kinds=("label", "mixed"), seed=41
+    )
+    pool = list(preds) + [Or((preds[0], preds[1]))]
+    eng.estimator.fit(pool, list(sels) + [0.1])           # Or entry skipped
+    wild = Predicate(nots=(Not(LabelEq(0, 9999)),))       # valid query: all-true
+    assert eng.stats.independence_sel(wild) == 1.0        # was IndexError
+    est, exact = eng.estimator.estimate_ex(wild)
+    assert exact and est == pytest.approx(wild.selectivity(ds.cat, ds.num), abs=0)
+
+
+def test_engine_without_attr_index_stays_two_way():
+    ds = make_dataset("sift", scale="2000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num,
+        EngineConfig(n_lists=16, seed=0, attr_index=False),
+    ).build()
+    assert eng.attr_index is None
+    _, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, 6, kinds=("range",), seed=3)
+    for p in preds:
+        est, exact = eng.estimator.estimate_ex(p)
+        assert not exact
+        r = eng.query(ds.vectors[0], p, k=5)
+        assert r.decision in (PRE_FILTER, POST_FILTER)
+
+
+# ----------------------------------------------------------------------
+# hypothesis property suite (the deterministic suites above always run;
+# these fuzz the same invariants when hypothesis is installed)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # container without hypothesis: skip below
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def corpus_and_dnf(draw):
+        n = draw(st.integers(0, 300))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        cat, num = _rand_corpus(rng, n)
+        pred = _rand_dnf(rng)
+        return cat, num, pred
+
+    @given(corpus_and_dnf())
+    @settings(max_examples=60, deadline=None)
+    def test_property_compiled_equals_eval(args):
+        cat, num, pred = args
+        index = AttributeIndex.build(cat, num)
+        ref = pred.eval(cat, num)
+        c = index.compile(pred)
+        assert (c.mask() == ref).all()
+        assert c.popcount == int(ref.sum())
+
+    @given(
+        ivs=st.lists(
+            st.tuples(
+                st.floats(-50, 50, allow_nan=False),
+                st.floats(-50, 50, allow_nan=False),
+            ),
+            min_size=1, max_size=5,
+        )
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_interval_merge_canonical(ivs):
+        r = RangePred(0, tuple(ivs))
+        # canonical: sorted, non-empty, pairwise disjoint and non-adjacent
+        for (lo1, hi1), (lo2, hi2) in zip(r.intervals, r.intervals[1:]):
+            assert lo1 < hi1 and lo2 < hi2 and hi1 < lo2
+        # semantics preserved vs the raw union
+        x = np.linspace(-60, 60, 997, dtype=np.float32)[:, None]
+        cat = np.zeros((997, 0), np.int32)
+        raw = np.zeros(997, bool)
+        for lo, hi in ivs:
+            raw |= (x[:, 0] >= lo) & (x[:, 0] < hi)
+        assert (r.eval(cat, x) == raw).all()
+        # width equals measure of the union (no double counting)
+        assert r.total_width == pytest.approx(
+            sum(hi - lo for lo, hi in r.intervals), abs=0
+        )
+else:  # keep a visible skip marker so CI reports the property suite's state
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_compiled_equals_eval():
+        pass

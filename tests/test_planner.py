@@ -1,14 +1,21 @@
 """Core-planner MLP tests: learnability, determinism, ROC-AUC helper."""
 import numpy as np
 
-from repro.core.planner import CorePlanner, roc_auc
+from repro.core.planner import (
+    CorePlanner, PlannerFeatures, INDEXED_PRE, POST_FILTER, PRE_FILTER, roc_auc,
+)
+
+F = PlannerFeatures.N_FEATURES
 
 
 def _toy_problem(n=600, seed=0):
     """Synthetic planner problem: decision boundary is a nonlinear function
-    of 'selectivity' and 'corpus size' features (like the real trade-off)."""
+    of 'selectivity' and 'corpus size' features (like the real trade-off).
+    The sel_is_exact column is held at 0 so ``decide`` stays on the learned
+    2-way head (the 3-way promotion has its own test below)."""
     rng = np.random.default_rng(seed)
-    x = rng.normal(0, 1, size=(n, 9)).astype(np.float32)
+    x = rng.normal(0, 1, size=(n, F)).astype(np.float32)
+    x[:, PlannerFeatures.SEL_EXACT_COL] = 0.0
     sel, logn = x[:, 3], x[:, 0]
     y = ((sel + 0.3 * logn + 0.1 * np.sin(3 * sel)) > 0).astype(np.int32)
     return x, y
@@ -35,7 +42,7 @@ def test_roc_auc_with_ties():
 
 def test_planner_learns():
     x, y = _toy_problem()
-    p = CorePlanner(n_features=9, seed=0).fit(x, y)
+    p = CorePlanner(n_features=F, seed=0).fit(x, y)
     acc = (p.decide(x) == y).mean()
     assert acc > 0.9, f"planner train acc {acc}"
 
@@ -44,9 +51,24 @@ def test_planner_generalises():
     x, y = _toy_problem(800, seed=1)
     xt, yt = x[:600], y[:600]
     xv, yv = x[600:], y[600:]
-    p = CorePlanner(n_features=9, seed=0).fit(xt, yt)
+    p = CorePlanner(n_features=F, seed=0).fit(xt, yt)
     auc = roc_auc(yv, p.predict_proba(xv))
     assert auc > 0.9, f"val AUC {auc}"
+
+
+def test_planner_three_way_promotion():
+    """Rows the 2-way head sends to pre-filtering upgrade to INDEXED_PRE
+    exactly when the sel_is_exact feature is set; post rows never change."""
+    x, y = _toy_problem(400)
+    p = CorePlanner(n_features=F, seed=0).fit(x, y)
+    base = (p.predict_proba(x) >= 0.5).astype(np.int32)
+    xe = x.copy()
+    xe[:, PlannerFeatures.SEL_EXACT_COL] = 1.0
+    three = p.decide(xe)
+    assert (three[base == POST_FILTER] == POST_FILTER).all()
+    assert (three[base == PRE_FILTER] == INDEXED_PRE).all()
+    # and with the flag clear, decide IS the 2-way head
+    assert np.array_equal(p.decide(x), base)
 
 
 def test_planner_deterministic():
@@ -62,12 +84,12 @@ def test_planner_tiny_trainset():
     garbage params).  Tiny sets must skip the holdout and still fit."""
     for n in (2, 3, 4):
         rng = np.random.default_rng(n)
-        x = rng.normal(size=(n, 9)).astype(np.float32)
+        x = rng.normal(size=(n, F)).astype(np.float32)
         y = (np.arange(n) % 2).astype(np.int32)
         p = CorePlanner(seed=0).fit(x, y)
         proba = p.predict_proba(x)
         assert np.isfinite(proba).all(), f"n={n}: non-finite probabilities"
-        assert set(p.decide(x).tolist()) <= {0, 1}
+        assert set(p.decide(x).tolist()) <= {PRE_FILTER, POST_FILTER, INDEXED_PRE}
 
 
 def test_planner_batched_predict_matches_rows():
