@@ -30,7 +30,26 @@ from repro.data import make_dataset
 from repro.filter import AttributeIndex, PredicateCache
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-N = int(os.environ.get("REPRO_FILTER_BENCH_N", 100_000))
+
+
+def _resolve_n() -> int:
+    """Corpus size: explicit REPRO_FILTER_BENCH_N wins, else the suite-wide
+    REPRO_BENCH_SCALE with the same mapping every other suite uses
+    (unset => "small" => 30k, matching `benchmarks/common.py`), so one
+    `run.py` invocation benches every suite at one consistent scale.  The
+    standalone `__main__` path defaults the env to "reduced" (100k) to
+    preserve this script's historical headline scale."""
+    env = os.environ.get("REPRO_FILTER_BENCH_N")
+    if env:
+        return int(env)
+    scale = os.environ.get("REPRO_BENCH_SCALE", "small")
+    if scale == "small":
+        return 30_000
+    if scale == "reduced":
+        return 100_000
+    return int(scale)
+
+
 TIERS = {"low": (0.005, 0.02), "mid": (0.05, 0.15), "high": (0.25, 0.5)}
 N_PREDS = 12          # predicates per tier
 REPEATS = 7           # timing repeats (min taken)
@@ -99,8 +118,9 @@ def cache_trace(preds, index, n_requests=2000, capacity=64, seed=0):
 
 
 def main():
-    print(f"filter_bench: N={N} (arxiv-shaped metadata: 3 cat + 2 num attrs)")
-    ds = make_dataset("arxiv", scale=str(N), seed=0)
+    n = _resolve_n()
+    print(f"filter_bench: N={n} (arxiv-shaped metadata: 3 cat + 2 num attrs)")
+    ds = make_dataset("arxiv", scale=str(n), seed=0)
     cat, num = ds.cat, ds.num
 
     t0 = time.perf_counter()
@@ -108,7 +128,7 @@ def main():
     t_build = time.perf_counter() - t0
     print(f"  attribute index build: {t_build*1e3:.1f} ms")
 
-    out = {"n": N, "dataset": "arxiv", "index_build_ms": round(t_build * 1e3, 2),
+    out = {"n": n, "dataset": "arxiv", "index_build_ms": round(t_build * 1e3, 2),
            "tiers": {}}
 
     # conjunctive tiers (the paper's predicate class — and the acceptance
@@ -142,10 +162,30 @@ def main():
     print(f"  min cached conjunctive speedup across tiers: {min(conj):.1f}x "
           f"(acceptance floor: 5x)")
 
-    path = REPO_ROOT / "BENCH_filter.json"
+    # the committed BENCH_filter.json records the 100k headline run; other
+    # scales write a scale-suffixed (gitignored) file so a small-scale
+    # `benchmarks/run.py` sweep can't clobber the recorded perf trajectory
+    name = "BENCH_filter.json" if n == 100_000 else f"BENCH_filter_n{n}.json"
+    path = REPO_ROOT / name
     path.write_text(json.dumps(out, indent=2) + "\n")
     print(f"  wrote {path}")
+    return out
+
+
+def run():
+    """`benchmarks/run.py` adaptor: one CSV-able row per tier."""
+    out = main()
+    return [
+        {
+            "tier": tier,
+            "cached_us": row["cached_us"],
+            "speedup_cached": row["speedup_cached"],
+            "speedup_cold": row["speedup_cold"],
+        }
+        for tier, row in out["tiers"].items()
+    ]
 
 
 if __name__ == "__main__":
+    os.environ.setdefault("REPRO_BENCH_SCALE", "reduced")   # 100k standalone
     main()

@@ -58,6 +58,20 @@ def main() -> None:
     for r in kernel_bench.run():
         print(f"kernel_{r['kernel']},{r['vmem_bytes']},fits={r['fits_16MiB']}")
 
+    from . import filter_bench
+    for r in filter_bench.run():
+        print(
+            f"filter_{r['tier']},{r['cached_us']},"
+            f"speedup_cached={r['speedup_cached']}x;speedup_cold={r['speedup_cold']}x"
+        )
+
+    from . import runtime_bench
+    for r in runtime_bench.run():
+        print(
+            f"runtime_{r['name']},{r['p99_us']},"
+            f"speedup={r['speedup']};deadline_hit={r['deadline_hit_rate']}"
+        )
+
     print(f"# total bench wall time {time.time()-t_start:.1f}s", file=sys.stderr)
 
 

@@ -23,7 +23,7 @@ def run():
     for name in ("arxiv", "sift"):        # one mixed-metadata + one range set
         ds, eng, _, _ = get_fixture(name)
         est = eng.estimator                       # exact fast path (index)
-        model_only = SelectivityEstimator(eng.stats)   # no index: model path
+        model_only = SelectivityEstimator(eng.dataset_stats)   # no index: model path
         model_only.model = est.model
         kinds = {"range": ("range",), "mixed": ("mixed",), "label": ("label",)}
         for kname, ks in kinds.items():

@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,7 +32,7 @@ from .predicates import AnyPredicate
 from .selectivity import SelectivityEstimator
 from .stats import DatasetStats
 
-__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard"]
+__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard", "PlanCache"]
 
 
 @dataclasses.dataclass
@@ -45,6 +46,7 @@ class EngineConfig:
     attr_index: bool = True            # build the bitmap/range attribute index
     range_buckets: int = 128           # filter.ranges.DEFAULT_BUCKETS
     pred_cache_size: int = 256         # compiled-predicate LRU entries
+    plan_cache_size: int = 1024        # memoised (predicate, k) plan entries
 
 
 @dataclasses.dataclass
@@ -122,6 +124,66 @@ def _execute_grouped(
         out_d[post_rows], out_i[post_rows] = d, ids
         rounds[post_rows] = rnd
     return out_d, out_i, rounds
+
+
+class PlanCache:
+    """LRU memo of ``(canonical predicate key, k) -> (est, decision)``.
+
+    Serving traffic repeats predicates constantly; planning the same
+    predicate is pure — the decision depends only on predicate + dataset
+    statistics + the current planner head — so repeats can skip the
+    estimator and the MLP dispatch entirely.  Invalidation is tied to the
+    things a cached plan DOES depend on, via :meth:`validate_epoch`
+    against ``(planner_version, planner.generation,
+    estimator.generation)`` on every lookup: a planner swap, a planner or
+    estimator refit — even one invoked directly on ``engine.planner`` /
+    ``engine.estimator`` — empties the memo before it can serve a stale
+    plan.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._store: "OrderedDict[Tuple, Tuple[float, int]]" = OrderedDict()
+        self.epoch: Tuple = ()        # engine._plan_epoch() the memo is valid under
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def validate_epoch(self, epoch: Tuple) -> None:
+        """Drop every entry if the (planner head, estimator) pair the cached
+        plans were computed under has changed — catches direct
+        ``estimator.fit()`` calls that bypass the engine's own clear hooks."""
+        if epoch != self.epoch:
+            self._store.clear()
+            self.epoch = epoch
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key) -> Optional[Tuple[float, int]]:
+        hit = self._store.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._store.move_to_end(key)
+        return hit
+
+    def put(self, key, value: Tuple[float, int]) -> None:
+        self._store[key] = value
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "size": len(self._store), "capacity": self.capacity,
+            "hits": self.hits, "misses": self.misses, "evictions": self.evictions,
+        }
 
 
 @dataclasses.dataclass
@@ -207,7 +269,7 @@ class FilteredANNEngine:
         unsharded :meth:`query` need the full :meth:`build`.
         """
         t0 = time.perf_counter()
-        self.stats = DatasetStats.build(
+        self.dataset_stats = DatasetStats.build(
             self.vectors, self.cat, self.num,
             sample_frac=self.config.sample_frac, seed=self.config.seed,
         )
@@ -216,18 +278,24 @@ class FilteredANNEngine:
         # the estimator's exact fast path and the indexed pre-filter
         # executor compile each predicate once between them
         from ..filter import AttributeIndex, PredicateCache
+        from ..filter.cache import canonical_key
 
         self.attr_index = (
             AttributeIndex.build(self.cat, self.num, self.config.range_buckets)
             if self.config.attr_index else None
         )
         self.pred_cache = PredicateCache(self.config.pred_cache_size)
+        # memoised plans for repeat predicates (pure in predicate + stats +
+        # planner head; cleared on fit/swap_planner)
+        self.plan_cache = PlanCache(self.config.plan_cache_size)
+        self._plan_key = canonical_key
+        self.planner_version = 0
         t2 = time.perf_counter()
         self.estimator = SelectivityEstimator(
-            self.stats, index=self.attr_index, cache=self.pred_cache
+            self.dataset_stats, index=self.attr_index, cache=self.pred_cache
         )
         self.planner = CorePlanner(seed=self.config.seed)
-        self.feat = PlannerFeatures(self.stats)
+        self.feat = PlannerFeatures(self.dataset_stats)
         self.build_time_["stats"] = t1 - t0
         self.build_time_["attr_index"] = t2 - t1
         return self
@@ -276,6 +344,26 @@ class FilteredANNEngine:
         l2_topk(q, self.vectors, k, np.ones(n, bool))
 
     # ------------------------------------------------------------------
+    def label_query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10,
+                    ) -> Tuple[int, float, float, float]:
+        """Paper §3.1 utility labelling — the ONE definition shared by the
+        offline :meth:`fit` loop, the online feedback loop's shadow
+        labeller, and the benchmarks' oracle: run BOTH strategies against
+        the exact masked top-k and pick the winner by utility
+        U = recall@k / T_search.  Returns
+        ``(label, true_selectivity, u_pre, u_post)``."""
+        q = np.atleast_2d(q)
+        mask = pred.eval(self.cat, self.num)
+        true_sel = float(mask.mean())
+        _, ti = l2_topk(q, self.vectors, k, mask)             # exact ground truth
+        ti = np.asarray(ti)
+        r_pre = self.pre_exec.search(q, pred, k)
+        r_post = self.post_exec.search(q, pred, k, est_selectivity=true_sel)
+        u_pre = recall_at_k(r_pre.ids, ti) / max(r_pre.elapsed, 1e-7)
+        u_post = recall_at_k(r_post.ids, ti) / max(r_post.elapsed, 1e-7)
+        label = PRE_FILTER if u_pre >= u_post else POST_FILTER
+        return label, true_sel, u_pre, u_post
+
     def fit(
         self,
         train_queries: Sequence[np.ndarray],
@@ -288,16 +376,7 @@ class FilteredANNEngine:
         t0 = time.perf_counter()
         feats, labels, true_sels = [], [], []
         for q, pred in zip(train_queries, train_preds):
-            q = np.atleast_2d(q)
-            mask = pred.eval(self.cat, self.num)
-            true_sel = float(mask.mean())
-            td, ti = l2_topk(q, self.vectors, k, mask)        # exact ground truth
-            ti = np.asarray(ti)
-            r_pre = self.pre_exec.search(q, pred, k)
-            r_post = self.post_exec.search(q, pred, k, est_selectivity=true_sel)
-            u_pre = recall_at_k(r_pre.ids, ti) / max(r_pre.elapsed, 1e-7)
-            u_post = recall_at_k(r_post.ids, ti) / max(r_post.elapsed, 1e-7)
-            label = PRE_FILTER if u_pre >= u_post else POST_FILTER
+            label, true_sel, u_pre, u_post = self.label_query(q, pred, k)
             est0, ex0 = self.estimator.estimate_ex(pred)  # pre-GBM estimate
             feats.append(self.feat.vector(pred, est0, k, ex0))
             labels.append(label)
@@ -315,8 +394,37 @@ class FilteredANNEngine:
         # warm the single-query predict shape: the first live query must not
         # pay the (1, F) jit compile (~150 ms) inside its latency budget
         self.planner.decide(feats[0])
+        # estimator AND head both changed: memoised plans are stale
+        self.plan_cache.clear()
+        self.planner_version += 1
         self.build_time_["fit"] = time.perf_counter() - t0
         return self
+
+    def swap_planner(self, planner: CorePlanner) -> "FilteredANNEngine":
+        """Atomically install a refit planner head (the online feedback
+        loop's hook).  Clears the plan cache — memoised decisions belong to
+        the old head — and pre-warms the new head's (1, F) predict shape so
+        the first live query after a swap pays no jit compile."""
+        self.planner = planner
+        self.plan_cache.clear()
+        self.planner_version += 1
+        if planner.params is not None:
+            planner.decide(np.zeros(planner.n_features, np.float32))
+        return self
+
+    def stats(self) -> dict:
+        """Public serving-counter accessor: predicate-cache hit/miss/eviction
+        stats, plan-cache stats, and the planner head version — previously
+        only reachable by poking engine internals.  (Dataset statistics
+        live on ``self.dataset_stats``.)"""
+        out: dict = {"planner_version": getattr(self, "planner_version", 0)}
+        pred_cache = getattr(self, "pred_cache", None)
+        if pred_cache is not None:
+            out["pred_cache"] = pred_cache.stats()
+        plan_cache = getattr(self, "plan_cache", None)
+        if plan_cache is not None:
+            out["plan_cache"] = plan_cache.stats()
+        return out
 
     # ------------------------------------------------------------------
     def plan(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, float]:
@@ -328,8 +436,29 @@ class FilteredANNEngine:
         The plan depends only on predicate and dataset statistics — not on
         which corpus rows are local — so a sharded deployment plans ONCE and
         broadcasts the decision to every shard (serve.ShardedANNEngine).
+        Repeat predicates hit the plan cache and skip both the estimator
+        and the MLP dispatch (same values by purity, just cheaper).
         """
         t0 = time.perf_counter()
+        self.plan_cache.validate_epoch(self._plan_epoch())
+        key = (self._plan_key(pred), int(k))
+        hit = self.plan_cache.get(key)
+        if hit is not None:
+            return hit[0], hit[1], time.perf_counter() - t0
+        est, decision = self._plan_cold(pred, k)
+        self.plan_cache.put(key, (est, decision))
+        return est, decision, time.perf_counter() - t0
+
+    def _plan_epoch(self) -> Tuple[int, int, int]:
+        """What a cached plan is valid under: the installed head
+        (``planner_version``, bumped by fit/swap_planner), that head's own
+        fit generation, and the estimator's fit generation — the latter two
+        catch direct ``eng.planner.fit()`` / ``eng.estimator.fit()`` calls
+        that retrain in place without going through the engine's hooks."""
+        return (self.planner_version, self.planner.generation,
+                self.estimator.generation)
+
+    def _plan_cold(self, pred: AnyPredicate, k: int) -> Tuple[float, int]:
         est, exact = self.estimator.estimate_ex(pred)
         fv = self.feat.vector(pred, est, k, exact)
         if self.planner.params:
@@ -341,7 +470,7 @@ class FilteredANNEngine:
             decision = PRE_FILTER if est < 0.05 else POST_FILTER
             if decision == PRE_FILTER and exact:
                 decision = INDEXED_PRE
-        return est, decision, time.perf_counter() - t0
+        return est, decision
 
     def plan_batch(
         self, preds: Sequence[AnyPredicate], k: int = 10
@@ -350,18 +479,37 @@ class FilteredANNEngine:
         matrix, ONE planner jit dispatch instead of B.
 
         Returns ``(est_selectivities (B,), decisions (B,), plan_overhead_s)``
-        where the overhead covers the whole batch.
+        where the overhead covers the whole batch.  Rows whose (predicate,
+        k) was planned before resolve from the plan cache; only the misses
+        pay the estimator pass and the MLP dispatch.
         """
         t0 = time.perf_counter()
-        ests, exact = self.estimator.estimate_batch_ex(preds)
-        fm = self.feat.matrix(preds, ests, k, exact)
-        if self.planner.params:
-            decisions = self.planner.decide(fm).astype(np.int32)
-        else:
-            decisions = np.where(ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
-            decisions = np.where(
-                (decisions == PRE_FILTER) & exact, INDEXED_PRE, decisions
-            ).astype(np.int32)
+        self.plan_cache.validate_epoch(self._plan_epoch())
+        b = len(preds)
+        ests = np.zeros(b, np.float64)
+        decisions = np.zeros(b, np.int32)
+        keys = [(self._plan_key(p), int(k)) for p in preds]
+        miss = []
+        for i, key in enumerate(keys):
+            hit = self.plan_cache.get(key)
+            if hit is None:
+                miss.append(i)
+            else:
+                ests[i], decisions[i] = hit
+        if miss:
+            sub = [preds[i] for i in miss]
+            m_ests, m_exact = self.estimator.estimate_batch_ex(sub)
+            fm = self.feat.matrix(sub, m_ests, k, m_exact)
+            if self.planner.params:
+                m_dec = self.planner.decide(fm).astype(np.int32)
+            else:
+                m_dec = np.where(m_ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
+                m_dec = np.where(
+                    (m_dec == PRE_FILTER) & m_exact, INDEXED_PRE, m_dec
+                ).astype(np.int32)
+            for j, i in enumerate(miss):
+                ests[i], decisions[i] = float(m_ests[j]), int(m_dec[j])
+                self.plan_cache.put(keys[i], (float(m_ests[j]), int(m_dec[j])))
         return ests, decisions, time.perf_counter() - t0
 
     def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:

@@ -197,6 +197,10 @@ class CorePlanner:
         self.sigma = np.ones(self.n_head, np.float32)
         self.best_l2_: float = 1e-4
         self.val_auc_: float = 0.5
+        # bumped by fit(): decisions change when the head retrains in place,
+        # so anything memoising decisions (the engine's PlanCache) keys its
+        # validity on this generation (mirrors SelectivityEstimator.generation)
+        self.generation = 0
         self._predict_jit = jax.jit(lambda p, x: jax.nn.softmax(_logits(p, x))[:, 1])
 
     # ------------------------------------------------------------------
@@ -277,6 +281,7 @@ class CorePlanner:
             xn[tr], y[tr], self.best_l2_, self.seed,
             xn[va] if val_ok else None, y[va] if val_ok else None,
         )
+        self.generation += 1
         return self
 
     # ------------------------------------------------------------------

@@ -54,6 +54,10 @@ class SelectivityEstimator:
         self.index = index          # Optional[repro.filter.AttributeIndex]
         self.cache = cache          # Optional[repro.filter.PredicateCache]
         self.model: Optional[GradientBoostingRegressor] = None
+        # bumped by fit(): estimates change when the GBM retrains, so
+        # anything memoising estimates (the engine's PlanCache) keys its
+        # validity on this generation
+        self.generation = 0
 
     # ------------------------------------------------------------------
     def features(self, pred: Predicate) -> np.ndarray:
@@ -115,6 +119,7 @@ class SelectivityEstimator:
         eps = 1e-6
         z = np.log((y + eps) / (1 - y + eps))
         self.model = GradientBoostingRegressor().fit(x, z)
+        self.generation += 1
         return self
 
     # ------------------------------------------------------------------

@@ -1,11 +1,19 @@
-"""Serving driver: batched generation with a (reduced) model.
+"""Serving drivers: LM generation and the trace-driven ANN runtime.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
-        --requests 8 --new-tokens 16
+    # batched LM generation with a (reduced) model
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen3-14b \
+        --reduced --requests 8 --new-tokens 16
+
+    # deadline-aware filtered-ANN serving: replay an arrival trace through
+    # the continuous micro-batcher (vs a naive per-request loop) and print
+    # the telemetry snapshot
+    PYTHONPATH=src python -m repro.launch.serve --mode ann-trace \
+        --corpus 20000 --requests 400 --rate 2000 --trace poisson --shards 4
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -16,16 +24,7 @@ from ..models.model import Model
 from ..serve.engine import Request, ServeEngine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-14b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    args = ap.parse_args(argv)
-
+def run_lm(args) -> dict:
     cfg = get_config(args.arch).reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -49,6 +48,96 @@ def main(argv=None):
     for uid in sorted(results)[:3]:
         print(f"  req {uid}: {results[uid][:8]}...")
     return results
+
+
+def run_ann_trace(args) -> dict:
+    """Build a fixture corpus + engine, replay a seeded arrival trace through
+    the runtime (optionally sharded, optionally with the planner feedback
+    loop), and compare against the naive per-request loop."""
+    from ..core import EngineConfig, FilteredANNEngine
+    from ..core.trainer import gen_queries
+    from ..data import make_dataset
+    from ..runtime import (
+        FeedbackConfig, OnlineFeedback, OnlineRuntime, SchedulerConfig, make_trace,
+    )
+    from ..serve import ShardedANNEngine
+
+    ds = make_dataset(args.dataset, scale=str(args.corpus), seed=args.seed)
+    print(f"corpus: {args.dataset} n={ds.vectors.shape[0]} d={ds.vectors.shape[1]}")
+    eng = FilteredANNEngine(ds.vectors, ds.cat, ds.num,
+                            EngineConfig(seed=args.seed)).build()
+    tq, tp, _ = gen_queries(ds.vectors, ds.cat, ds.num, args.fit_queries,
+                            kinds=ds.filter_kinds, seed=args.seed + 1)
+    eng.fit(tq, tp, k=args.k)
+    qs, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, args.pool,
+                               kinds=ds.filter_kinds, sel_range=(0.01, 0.4),
+                               seed=args.seed + 2)
+    trace = make_trace(args.trace, qs, list(preds), args.requests, args.rate,
+                       k=args.k, seed=args.seed + 3)
+
+    backend = ShardedANNEngine(eng, n_shards=args.shards) if args.shards > 1 else eng
+    feedback = None
+    if args.feedback:
+        feedback = OnlineFeedback(eng, FeedbackConfig(
+            sample_rate=args.sample_rate, seed=args.seed))
+    runtime = OnlineRuntime(
+        backend,
+        SchedulerConfig(max_batch=args.max_batch, max_wait=args.max_wait),
+        feedback=feedback,
+    )
+    report = runtime.run_trace(trace)
+    snap = report.telemetry.snapshot(backend)
+
+    # naive per-request loop on the same requests, for the throughput frame
+    t0 = time.perf_counter()
+    for r in trace:
+        backend.query(r.query, r.pred, r.k)
+    naive_wall = time.perf_counter() - t0
+
+    wall = snap["wall"]["exec_s"]
+    print(f"\ntrace: {trace.kind} rate={trace.rate:.0f}qps "
+          f"requests={len(trace)} shards={args.shards}")
+    print(f"runtime exec wall {wall:.2f}s ({len(trace)/wall:.0f} qps)  |  "
+          f"naive loop {naive_wall:.2f}s ({len(trace)/naive_wall:.0f} qps)  |  "
+          f"speedup {naive_wall/max(wall, 1e-9):.2f}x")
+    if feedback is not None:
+        snap["feedback"] = feedback.stats()
+    print(json.dumps(snap, indent=2, default=float))
+    return snap
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "ann-trace"), default="lm")
+    # lm mode
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    # shared / ann-trace mode
+    ap.add_argument("--requests", type=int, default=None,
+                    help="lm: 8, ann-trace: 400")
+    ap.add_argument("--dataset", default="arxiv")
+    ap.add_argument("--corpus", type=int, default=20_000)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--trace", choices=("poisson", "bursty"), default="poisson")
+    ap.add_argument("--rate", type=float, default=2000.0, help="virtual qps")
+    ap.add_argument("--pool", type=int, default=24, help="distinct predicates")
+    ap.add_argument("--fit-queries", type=int, default=40)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait", type=float, default=0.005)
+    ap.add_argument("--feedback", action="store_true",
+                    help="enable the online planner feedback loop")
+    ap.add_argument("--sample-rate", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.requests is None:
+        args.requests = 8 if args.mode == "lm" else 400
+    if args.mode == "lm":
+        return run_lm(args)
+    return run_ann_trace(args)
 
 
 if __name__ == "__main__":

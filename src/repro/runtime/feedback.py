@@ -1,0 +1,163 @@
+"""Online planner feedback: log sampled outcomes, refit, guard, swap.
+
+Closes the paper's learning loop from offline fit to online adaptation:
+the offline planner (§3.1) is trained once on a synthetic workload, but
+plan win-rates shift with the live query distribution — so the runtime
+samples a fraction of served traffic, shadow-executes BOTH strategies to
+get a ground-truth win label (same utility labelling as
+``FilteredANNEngine.fit``: U = recall@k / T_search against the exact
+masked top-k), and periodically refits a candidate ``CorePlanner`` from
+the accumulated log.
+
+The **drift guard** makes the swap safe: the log is split into a train
+slice and a holdout, the candidate trains on the slice, and it only
+replaces the serving head if its holdout ROC-AUC does not regress the
+current head's AUC on the same holdout (``auc_slack`` tolerance).  A
+refit gone wrong — too few examples, degenerate labels, noisy timings —
+keeps the old head and tries again later.
+
+The labeller is pluggable (``labeler=``) so tests can drive the loop with
+a deterministic oracle; the default shadow labeller measures real wall
+time, which is the one intentionally nondeterministic input in the
+runtime (virtual-time scheduling and result ids stay replayable — the
+replay tests run with feedback disabled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from ..core.engine import FilteredANNEngine, PlannedResult
+from ..core.planner import CorePlanner, roc_auc
+from .queue import RuntimeRequest
+
+__all__ = ["FeedbackConfig", "LogEntry", "OnlineFeedback"]
+
+
+@dataclasses.dataclass
+class FeedbackConfig:
+    sample_rate: float = 0.1    # fraction of traffic shadow-labelled
+    refit_every: int = 64       # new sampled examples between refit attempts
+    min_examples: int = 32      # never refit on less than this
+    holdout_frac: float = 0.25  # drift-guard holdout share of the log
+    auc_slack: float = 0.0      # candidate may be at most this much worse
+    max_log: int = 4096         # sliding window: oldest entries age out
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LogEntry:
+    """One sampled observation: what the paper's §3.1 labeller produces,
+    collected online instead of from a synthetic workload."""
+
+    features: np.ndarray        # planner feature vector at observe time
+    decision: int               # what the serving planner chose
+    label: int                  # ground-truth winner (PRE_FILTER/POST_FILTER)
+    latency: float              # latency the SERVED strategy actually paid (s)
+
+
+class OnlineFeedback:
+    """Sampled observe -> log -> guarded refit loop around an engine.
+
+    ``engine`` must be a fully ``build()``-and-ideally-``fit()`` flat
+    :class:`FilteredANNEngine` (shadow labelling runs its pre/post
+    executors; for a sharded deployment pass ``sharded.engine`` — planning
+    is central, so the refit benefits every shard).
+    """
+
+    def __init__(self, engine: FilteredANNEngine, config: Optional[FeedbackConfig] = None,
+                 labeler: Optional[Callable[[RuntimeRequest], int]] = None):
+        if not hasattr(engine, "pre_exec"):
+            raise ValueError(
+                "OnlineFeedback needs a fully built engine (build(), not "
+                "build_stats()): shadow labelling runs both executors"
+            )
+        self.engine = engine
+        self.config = config or FeedbackConfig()
+        self.labeler = labeler or self._shadow_label
+        self.rng = np.random.default_rng(self.config.seed)
+        self.log: List[LogEntry] = []
+        self.n_observed = 0
+        self.n_sampled = 0
+        self.n_refits = 0
+        self.n_swaps = 0
+        self._since_refit = 0
+
+    # ------------------------------------------------------------------
+    def _shadow_label(self, req: RuntimeRequest) -> int:
+        """Paper §3.1 labelling, online — delegates to the engine's shared
+        :meth:`FilteredANNEngine.label_query` (the SAME rule the offline
+        ``fit`` loop uses, so online and offline labels cannot drift)."""
+        label, _, _, _ = self.engine.label_query(req.query, req.pred, req.k)
+        return label
+
+    def observe(self, req: RuntimeRequest, res: PlannedResult) -> bool:
+        """Called per served request; returns True when it was sampled into
+        the log.  Sampling is seeded — which requests get shadow-labelled
+        is replayable even though the measured labels are not."""
+        self.n_observed += 1
+        if self.rng.random() >= self.config.sample_rate:
+            return False
+        label = self.labeler(req)
+        est, exact = self.engine.estimator.estimate_ex(req.pred)
+        fv = self.engine.feat.vector(req.pred, est, req.k, exact)
+        # the logged latency is what the SERVED strategy paid (its share of
+        # the executed batch), not the shadow race's winner time
+        self.log.append(LogEntry(fv, res.decision, int(label),
+                                 float(res.result.elapsed)))
+        if len(self.log) > self.config.max_log:
+            self.log = self.log[-self.config.max_log:]
+        self.n_sampled += 1
+        self._since_refit += 1
+        return True
+
+    # ------------------------------------------------------------------
+    def maybe_refit(self) -> bool:
+        """Refit when enough new samples accumulated; returns True iff the
+        candidate head was swapped in."""
+        cfg = self.config
+        if self._since_refit < cfg.refit_every or len(self.log) < cfg.min_examples:
+            return False
+        self._since_refit = 0
+        return self.refit()
+
+    def refit(self) -> bool:
+        """One guarded refit attempt from the current log."""
+        cfg = self.config
+        x = np.stack([e.features for e in self.log])
+        y = np.asarray([e.label for e in self.log], np.int32)
+        self.n_refits += 1
+        n = len(y)
+        # deterministic holdout: seeded by (config seed, refit ordinal) so
+        # successive refits don't always hold out the same rows
+        perm = np.random.default_rng(cfg.seed + 7919 * self.n_refits).permutation(n)
+        n_hold = max(1, int(round(cfg.holdout_frac * n)))
+        hold, train = perm[:n_hold], perm[n_hold:]
+        if (len(set(y[train].tolist())) < 2 or len(set(y[hold].tolist())) < 2):
+            return False          # degenerate split: nothing to learn/guard
+        candidate = CorePlanner(
+            n_features=x.shape[1], seed=cfg.seed + self.n_refits
+        ).fit(x[train], y[train])
+        cand_auc = roc_auc(y[hold], candidate.predict_proba(x[hold]))
+        current = self.engine.planner
+        if current.params is not None:
+            curr_auc = roc_auc(y[hold], current.predict_proba(x[hold]))
+        else:
+            curr_auc = -np.inf    # untrained fallback head: any fit beats it
+        if cand_auc < curr_auc - cfg.auc_slack:
+            return False          # drift guard: the new head regressed
+        self.engine.swap_planner(candidate)
+        self.n_swaps += 1
+        return True
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "observed": self.n_observed,
+            "sampled": self.n_sampled,
+            "log_size": len(self.log),
+            "refits": self.n_refits,
+            "swaps": self.n_swaps,
+        }

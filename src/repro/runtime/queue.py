@@ -1,0 +1,221 @@
+"""Simulated-clock request queue + arrival-trace generators.
+
+The serving runtime is a discrete-event simulation over a VIRTUAL clock:
+requests carry arrival timestamps and absolute deadlines, the scheduler
+(`runtime/scheduler.py`) advances time deterministically, and service
+durations come from a deterministic cost model.  Real engine execution
+still happens (result ids are real), but nothing about *when* things
+happen depends on wall-clock measurement — which is what makes a trace
+replayable bit-for-bit: same trace + seed => identical batch compositions,
+result ids, and telemetry counters.
+
+Trace generators (all seeded):
+
+* :func:`poisson_trace` — memoryless arrivals at a target rate, the
+  steady-traffic baseline.
+* :func:`bursty_trace`  — on/off modulated Poisson (bursts of
+  ``burst_factor`` x the base rate), the flash-crowd shape.
+
+Both draw predicates Zipf-distributed from a pool (a few hot filters
+dominate — the regime the predicate cache and the batched pre-filter
+group are designed for) and assign SLO tiers by a mix ratio; a tier maps
+to a relative deadline (``SLO_TIERS``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.predicates import AnyPredicate
+
+__all__ = [
+    "SLO_TIERS",
+    "RuntimeRequest",
+    "ArrivalTrace",
+    "RequestQueue",
+    "poisson_trace",
+    "bursty_trace",
+    "make_trace",
+]
+
+# tier -> relative deadline in virtual seconds (arrival + deadline budget).
+# Calibrated against ServiceModel's default costs: a full 64-batch serves in
+# ~20 virtual ms, so "interactive" can only be met by early/small flushes —
+# exactly the preemption behaviour the deadline-aware scheduler exists for.
+SLO_TIERS: Dict[str, float] = {
+    "interactive": 0.02,
+    "standard": 0.10,
+    "batch": 1.00,
+}
+
+
+@dataclasses.dataclass
+class RuntimeRequest:
+    """One in-flight filtered-ANN request in the serving runtime."""
+
+    rid: int                      # unique, dense, trace order
+    t_arrival: float              # virtual seconds
+    query: np.ndarray             # (d,) float32
+    pred: AnyPredicate
+    k: int
+    tier: str = "standard"
+    deadline: float = np.inf      # ABSOLUTE virtual time
+
+    @property
+    def priority(self):
+        """Queue ordering key: tightest deadline first, FIFO within a
+        deadline, rid as the total tie-break (determinism)."""
+        return (self.deadline, self.t_arrival, self.rid)
+
+
+@dataclasses.dataclass
+class ArrivalTrace:
+    """A replayable arrival stream: requests sorted by ``t_arrival``."""
+
+    requests: List[RuntimeRequest]
+    kind: str                      # "poisson" | "bursty"
+    rate: float                    # mean arrival rate (virtual qps)
+    seed: int
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def __iter__(self):
+        return iter(self.requests)
+
+
+class RequestQueue:
+    """Pending-request pool with deadline-aware draining.
+
+    Tiny on purpose: queues hold at most a few hundred requests between
+    flushes, so a plain list + sort-on-pop is both fast enough and — unlike
+    a heap with incidental tie handling — *obviously* deterministic, which
+    the replay guarantee leans on.
+    """
+
+    def __init__(self):
+        self._items: List[RuntimeRequest] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def push(self, req: RuntimeRequest) -> None:
+        self._items.append(req)
+
+    @property
+    def oldest_arrival(self) -> float:
+        return min(r.t_arrival for r in self._items)
+
+    @property
+    def tightest_deadline(self) -> float:
+        return min(r.deadline for r in self._items)
+
+    def pop(self, n: int) -> List[RuntimeRequest]:
+        """Remove and return the ``n`` highest-priority requests (tightest
+        deadline first) — tight-SLO arrivals jump the whole queue."""
+        self._items.sort(key=lambda r: r.priority)
+        batch, self._items = self._items[:n], self._items[n:]
+        return batch
+
+
+# ----------------------------------------------------------------------
+# trace generators
+# ----------------------------------------------------------------------
+def _assemble(
+    arrivals: np.ndarray,
+    queries: np.ndarray,
+    preds: Sequence[AnyPredicate],
+    k: int,
+    tier_mix: Dict[str, float],
+    zipf_a: float,
+    rng: np.random.Generator,
+) -> List[RuntimeRequest]:
+    n = arrivals.size
+    # Zipf over the predicate pool: rank-r filter drawn with p ~ 1/r^a
+    ranks = np.arange(1, len(preds) + 1, dtype=np.float64)
+    p_pred = 1.0 / ranks**zipf_a
+    p_pred /= p_pred.sum()
+    pred_idx = rng.choice(len(preds), size=n, p=p_pred)
+    q_idx = rng.integers(0, queries.shape[0], size=n)
+    tiers = list(tier_mix)
+    p_tier = np.asarray([tier_mix[t] for t in tiers], np.float64)
+    p_tier /= p_tier.sum()
+    tier_idx = rng.choice(len(tiers), size=n, p=p_tier)
+    reqs = []
+    for i in range(n):
+        tier = tiers[int(tier_idx[i])]
+        t = float(arrivals[i])
+        reqs.append(RuntimeRequest(
+            rid=i, t_arrival=t,
+            query=queries[q_idx[i]], pred=preds[pred_idx[i]], k=k,
+            tier=tier, deadline=t + SLO_TIERS[tier],
+        ))
+    return reqs
+
+
+_DEFAULT_MIX = {"interactive": 0.2, "standard": 0.6, "batch": 0.2}
+
+
+def poisson_trace(
+    queries: np.ndarray,
+    preds: Sequence[AnyPredicate],
+    n_requests: int,
+    rate: float,
+    k: int = 10,
+    tier_mix: Optional[Dict[str, float]] = None,
+    zipf_a: float = 1.2,
+    seed: int = 0,
+) -> ArrivalTrace:
+    """Memoryless arrivals: exponential inter-arrival gaps at ``rate`` qps."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    reqs = _assemble(arrivals, queries, preds, k, tier_mix or _DEFAULT_MIX,
+                     zipf_a, rng)
+    return ArrivalTrace(reqs, "poisson", rate, seed)
+
+
+def bursty_trace(
+    queries: np.ndarray,
+    preds: Sequence[AnyPredicate],
+    n_requests: int,
+    rate: float,
+    burst_factor: float = 8.0,
+    burst_frac: float = 0.25,
+    cycle: float = 0.25,
+    k: int = 10,
+    tier_mix: Optional[Dict[str, float]] = None,
+    zipf_a: float = 1.2,
+    seed: int = 0,
+) -> ArrivalTrace:
+    """On/off modulated Poisson with mean rate ``rate``: a fraction
+    ``burst_frac`` of each ``cycle`` runs at ``burst_factor`` x the off-rate
+    (off-rate solved so the time-average stays ``rate``) — the flash-crowd
+    shape that stresses queueing and deadline misses."""
+    rng = np.random.default_rng(seed)
+    # rate_off * (1 - f + f * factor) = rate
+    rate_off = rate / (1.0 - burst_frac + burst_frac * burst_factor)
+    rate_on = rate_off * burst_factor
+    arrivals = np.empty(n_requests)
+    t = 0.0
+    for i in range(n_requests):
+        in_burst = (t % cycle) < burst_frac * cycle
+        r = rate_on if in_burst else rate_off
+        t += float(rng.exponential(1.0 / r))
+        arrivals[i] = t
+    reqs = _assemble(arrivals, queries, preds, k, tier_mix or _DEFAULT_MIX,
+                     zipf_a, rng)
+    return ArrivalTrace(reqs, "bursty", rate, seed)
+
+
+def make_trace(kind: str, *args, **kwargs) -> ArrivalTrace:
+    """Dispatch by shape name — what the CLI driver and benchmarks use."""
+    gen = {"poisson": poisson_trace, "bursty": bursty_trace}.get(kind)
+    if gen is None:
+        raise ValueError(f"unknown trace kind {kind!r} (poisson|bursty)")
+    return gen(*args, **kwargs)

@@ -1,0 +1,119 @@
+"""Serving-runtime telemetry: per-request, per-batch, and cache counters.
+
+Two strictly separated ledgers:
+
+* **deterministic** — everything derived from virtual time and executed
+  results: completion counts, plan-choice mix, batch-size histogram,
+  deadline hits/misses per SLO tier, virtual latency quantiles, the
+  fill-rate recall proxy, and the engine's predicate/plan cache counters
+  (surfaced through ``backend.stats()``).  Same trace + seed reproduces
+  these bit-for-bit (`tests/test_runtime.py`).
+* **wall** — measured execution wall time (throughput accounting for the
+  benchmarks).  Real clocks are never folded into the deterministic
+  ledger.
+
+``snapshot()`` returns both; ``counters()`` returns only the deterministic
+part, which is what the replay tests compare.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from ..core.engine import PlannedResult, STRATEGY_NAMES
+from .queue import RuntimeRequest
+
+__all__ = ["Telemetry"]
+
+
+def _quantiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {
+        "p50": float(np.quantile(a, 0.50)),
+        "p99": float(np.quantile(a, 0.99)),
+        "mean": float(a.mean()),
+        "max": float(a.max()),
+    }
+
+
+class Telemetry:
+    """Accumulates runtime observations; ``snapshot()`` is the public API."""
+
+    def __init__(self):
+        self.n_completed = 0
+        self.n_batches = 0
+        self.plan_counts: Dict[str, int] = {n: 0 for n in STRATEGY_NAMES.values()}
+        self.batch_sizes: Dict[int, int] = {}
+        self.deadline_met: Dict[str, int] = {}
+        self.deadline_missed: Dict[str, int] = {}
+        self.deadline_flushes = 0           # batches flushed by SLO pressure
+        self._lat: Dict[str, List[float]] = {}   # virtual latency per tier
+        self._queue_wait: List[float] = []       # virtual arrival -> flush
+        self._fill: List[float] = []             # recall proxy: k-slots filled
+        self._expansions: List[int] = []         # post-filter effort
+        self.wall_exec_s = 0.0                   # measured (NOT deterministic)
+
+    # ------------------------------------------------------------------
+    def record_batch(self, reqs: List[RuntimeRequest], results: List[PlannedResult],
+                     t_flush: float, t_complete: float,
+                     deadline_flush: bool = False) -> None:
+        """One executed micro-batch: per-request latency/deadline/plan
+        accounting in VIRTUAL time plus batch-level counters."""
+        self.n_batches += 1
+        self.batch_sizes[len(reqs)] = self.batch_sizes.get(len(reqs), 0) + 1
+        if deadline_flush:
+            self.deadline_flushes += 1
+        for req, res in zip(reqs, results):
+            self.n_completed += 1
+            self.plan_counts[STRATEGY_NAMES[res.decision]] += 1
+            lat = t_complete - req.t_arrival
+            self._lat.setdefault(req.tier, []).append(lat)
+            self._queue_wait.append(t_flush - req.t_arrival)
+            bucket = self.deadline_met if t_complete <= req.deadline else self.deadline_missed
+            bucket[req.tier] = bucket.get(req.tier, 0) + 1
+            ids = res.result.ids
+            self._fill.append(float((ids >= 0).sum()) / max(ids.size, 1))
+            self._expansions.append(res.result.n_expansions)
+
+    def record_wall(self, seconds: float) -> None:
+        self.wall_exec_s += seconds
+
+    # ------------------------------------------------------------------
+    def counters(self) -> Dict:
+        """The deterministic ledger only (what replay tests compare)."""
+        return {
+            "n_completed": self.n_completed,
+            "n_batches": self.n_batches,
+            "plan_counts": dict(self.plan_counts),
+            "batch_sizes": dict(sorted(self.batch_sizes.items())),
+            "deadline_met": dict(sorted(self.deadline_met.items())),
+            "deadline_missed": dict(sorted(self.deadline_missed.items())),
+            "deadline_flushes": self.deadline_flushes,
+            "fill_rate": round(float(np.mean(self._fill)) if self._fill else 0.0, 6),
+            "mean_expansions": round(
+                float(np.mean(self._expansions)) if self._expansions else 0.0, 6
+            ),
+        }
+
+    def snapshot(self, backend=None) -> Dict:
+        """Full state: deterministic counters + virtual latency quantiles
+        (per tier and overall) + measured wall stats + the backend's cache
+        counters when it exposes ``stats()`` (both engines do)."""
+        all_lat = [x for xs in self._lat.values() for x in xs]
+        out = dict(self.counters())
+        out["latency_virtual"] = _quantiles(all_lat)
+        out["latency_by_tier"] = {t: _quantiles(xs) for t, xs in sorted(self._lat.items())}
+        out["queue_wait_virtual"] = _quantiles(self._queue_wait)
+        out["wall"] = {
+            "exec_s": self.wall_exec_s,
+            "throughput_qps": (
+                self.n_completed / self.wall_exec_s if self.wall_exec_s > 0 else 0.0
+            ),
+        }
+        stats = getattr(backend, "stats", None)
+        if callable(stats):
+            out["engine"] = stats()
+        return out

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.engine import FilteredANNEngine, PlannedResult, package_results
 from ..core.executors import SearchResult
-from ..core.predicates import Predicate
+from ..core.predicates import AnyPredicate
 from ..dist.collectives import merge_topk
 from ..models.model import Model
 
@@ -147,7 +147,7 @@ class ShardedANNEngine:
         self.shards = engine.shard_corpus(self.n_shards, n_lists=n_lists)
 
     # ------------------------------------------------------------------
-    def query(self, q: np.ndarray, pred: Predicate, k: int = 10) -> PlannedResult:
+    def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         q = np.atleast_2d(q)
         est, decision, plan_overhead = self.engine.plan(pred, k)
         t0 = time.perf_counter()
@@ -164,7 +164,8 @@ class ShardedANNEngine:
         )
         return PlannedResult(res, est, decision, plan_overhead)
 
-    def batch_query(self, queries: np.ndarray, preds, k: int = 10) -> List[PlannedResult]:
+    def batch_query(self, queries: np.ndarray, preds: Sequence[AnyPredicate],
+                    k: int = 10) -> List[PlannedResult]:
         """Batched sharded path: plan the whole batch ONCE, fan the batch —
         not single queries — out to every shard (each shard runs its
         decision-grouped executors over all B rows), then merge all shards'
@@ -185,3 +186,34 @@ class ShardedANNEngine:
         rounds = np.max(np.stack([r[2] for r in per_shard]), axis=0)
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
         return package_results(d, i, rounds, ests, decisions, share, plan_share)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Central engine counters (plan cache, estimator-side predicate
+        cache) plus the per-shard predicate caches aggregated — each shard
+        compiles its own bitmaps, so hit rates are summed across shards."""
+        out = self.engine.stats()
+        agg = {"hits": 0, "misses": 0, "evictions": 0, "size": 0}
+        n_caches = 0
+        for s in self.shards:
+            cache = getattr(s.ipre_exec, "cache", None) if s.ipre_exec else None
+            if cache is None:
+                continue
+            n_caches += 1
+            cs = cache.stats()
+            for key in agg:
+                agg[key] += cs[key]
+        if n_caches:
+            agg["n_shards"] = n_caches
+            out["shard_pred_cache"] = agg
+        return out
+
+    def runtime(self, config=None, service=None, feedback=None):
+        """Runtime-backed serving entrypoint: a deadline-aware
+        :class:`repro.runtime.OnlineRuntime` micro-batching onto this
+        sharded engine's ``batch_query`` fan-out.  Lazy import keeps
+        ``repro.serve`` importable without the runtime layer and avoids a
+        package cycle."""
+        from ..runtime import OnlineRuntime
+
+        return OnlineRuntime(self, config=config, service=service, feedback=feedback)

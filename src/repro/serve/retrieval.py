@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import FilteredANNEngine
-from ..core.predicates import Predicate
+from ..core.predicates import AnyPredicate
 from ..models.model import Model
 
 __all__ = ["RetrievalAugmentedServer"]
@@ -49,8 +49,9 @@ class RetrievalAugmentedServer:
         return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-6)
 
     # ------------------------------------------------------------------
-    def retrieve(self, tokens: np.ndarray, pred: Predicate, k: int = 5):
-        """tokens: (B, S) -> list of PlannedResult per row."""
+    def retrieve(self, tokens: np.ndarray, pred: AnyPredicate, k: int = 5):
+        """tokens: (B, S) -> list of PlannedResult per row.  Accepts the
+        full DNF predicate class (``Or``/``Not``), same as the engines."""
         q = np.asarray(self._embed(self.params, jnp.asarray(tokens)))
         # scale query into corpus space (corpus vectors are not normalised)
         scale = float(np.linalg.norm(self.ann.vectors, axis=1).mean())

@@ -352,9 +352,35 @@ def test_estimator_fit_tolerates_dnf_and_wild_codes(engine):
     pool = list(preds) + [Or((preds[0], preds[1]))]
     eng.estimator.fit(pool, list(sels) + [0.1])           # Or entry skipped
     wild = Predicate(nots=(Not(LabelEq(0, 9999)),))       # valid query: all-true
-    assert eng.stats.independence_sel(wild) == 1.0        # was IndexError
+    assert eng.dataset_stats.independence_sel(wild) == 1.0        # was IndexError
     est, exact = eng.estimator.estimate_ex(wild)
     assert exact and est == pytest.approx(wild.selectivity(ds.cat, ds.num), abs=0)
+
+
+def test_engine_stats_exposes_cache_counters(engine):
+    """Satellite: PredicateCache hit/miss/eviction stats are reachable
+    through the public ``FilteredANNEngine.stats()`` accessor (they used to
+    require poking ``eng.pred_cache`` internals), and serving traffic moves
+    them: a repeated predicate must register cache hits."""
+    ds, eng = engine
+    st0 = eng.stats()
+    assert {"planner_version", "pred_cache", "plan_cache"} <= set(st0)
+    assert {"hits", "misses", "evictions", "size", "capacity"} <= set(st0["pred_cache"])
+    # lowest-selectivity covered predicate => planned INDEXED_PRE, so the
+    # executor consults the predicate cache on every repeat
+    p = min(_predicate_pool(ds, n=8)[:8], key=lambda x: x.selectivity(ds.cat, ds.num))
+    q = ds.vectors[:1]
+    eng.query(q, p, K)
+    mid = eng.stats()["pred_cache"]
+    eng.query(q, p, K)
+    eng.query(q, p, K)
+    after = eng.stats()
+    # the repeat queries hit both the compiled-predicate cache and the
+    # memoised plan cache; nothing new was compiled
+    assert after["pred_cache"]["hits"] > mid["hits"]
+    assert after["pred_cache"]["misses"] == mid["misses"]
+    assert after["plan_cache"]["hits"] >= 2
+    assert after["pred_cache"]["evictions"] >= 0
 
 
 def test_engine_without_attr_index_stays_two_way():

@@ -1,0 +1,382 @@
+"""repro.runtime: traces, micro-batching scheduler, telemetry, feedback.
+
+The load-bearing guarantees:
+
+* **replay determinism** — same trace + seed => identical result ids,
+  batch compositions, and telemetry counters across runs;
+* **arrival-order invariance** — a request's result ids do not depend on
+  which micro-batch it landed in (leans on the batched pipeline's
+  bit-stability discipline: ``batch_query`` == per-query ``query``);
+* **deadline-aware scheduling** — tight-SLO requests preempt batch
+  formation and drain first;
+* **guarded feedback** — the online refit loop recovers a warped planner
+  and the drift guard refuses regressing candidates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    FilteredANNEngine,
+    LabelEq,
+    Or,
+    POST_FILTER,
+    PRE_FILTER,
+    Predicate,
+)
+from repro.core.planner import CorePlanner
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+from repro.runtime import (
+    FeedbackConfig,
+    OnlineFeedback,
+    OnlineRuntime,
+    RuntimeRequest,
+    SchedulerConfig,
+    ServiceModel,
+    SLO_TIERS,
+    bursty_trace,
+    poisson_trace,
+)
+from repro.serve import ShardedANNEngine
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def system():
+    ds = make_dataset("arxiv", scale="4000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num, EngineConfig(n_lists=32, seed=0)
+    ).build()
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 16, kinds=ds.filter_kinds,
+        sel_range=(0.01, 0.4), seed=2,
+    )
+    return ds, eng, qs, list(preds)
+
+
+def _trace(qs, preds, n=120, rate=3000.0, seed=5, kind="poisson"):
+    gen = poisson_trace if kind == "poisson" else bursty_trace
+    return gen(qs, preds, n, rate, k=K, seed=seed)
+
+
+# ----------------------------------------------------------------------
+# trace generators
+# ----------------------------------------------------------------------
+def test_trace_generators_deterministic_and_shaped(system):
+    _, _, qs, preds = system
+    a = poisson_trace(qs, preds, 200, 1000.0, seed=3)
+    b = poisson_trace(qs, preds, 200, 1000.0, seed=3)
+    assert [r.t_arrival for r in a] == [r.t_arrival for r in b]
+    assert [r.tier for r in a] == [r.tier for r in b]
+    assert all(x.pred is y.pred for x, y in zip(a, b))
+    c = poisson_trace(qs, preds, 200, 1000.0, seed=4)
+    assert [r.t_arrival for r in a] != [r.t_arrival for r in c]
+    # mean rate lands near the target; deadlines are tier offsets
+    span = a.requests[-1].t_arrival
+    assert 0.5 * 200 / 1000.0 < span < 2.0 * 200 / 1000.0
+    for r in a:
+        assert r.deadline == pytest.approx(r.t_arrival + SLO_TIERS[r.tier])
+    # bursty arrivals are burstier: higher inter-arrival coefficient of var
+    burst = bursty_trace(qs, preds, 400, 1000.0, seed=3)
+    pois = poisson_trace(qs, preds, 400, 1000.0, seed=3)
+    def cv(t):
+        gaps = np.diff([r.t_arrival for r in t])
+        return gaps.std() / gaps.mean()
+    assert cv(burst) > cv(pois)
+
+
+def test_zipf_predicate_mix(system):
+    """A few hot predicates dominate the trace (the cache-friendly regime)."""
+    _, _, qs, preds = system
+    t = poisson_trace(qs, preds, 600, 1000.0, zipf_a=1.2, seed=0)
+    counts = {}
+    for r in t:
+        counts[id(r.pred)] = counts.get(id(r.pred), 0) + 1
+    top = max(counts.values())
+    assert top > 600 / len(preds) * 2          # far above uniform share
+
+
+# ----------------------------------------------------------------------
+# replay determinism + arrival-order invariance (the tentpole guarantees)
+# ----------------------------------------------------------------------
+def test_runtime_replay_deterministic(system):
+    _, eng, qs, preds = system
+    trace = _trace(qs, preds)
+    cfg = SchedulerConfig(max_batch=16, max_wait=0.004)
+    a = OnlineRuntime(eng, cfg).run_trace(trace)
+    b = OnlineRuntime(eng, cfg).run_trace(trace)
+    assert a.batches == b.batches
+    assert a.telemetry.counters() == b.telemetry.counters()
+    # virtual latency statistics are part of the deterministic ledger too
+    sa, sb = a.telemetry.snapshot(), b.telemetry.snapshot()
+    assert sa["latency_virtual"] == sb["latency_virtual"]
+    assert sa["latency_by_tier"] == sb["latency_by_tier"]
+    for rid in a.results:
+        assert np.array_equal(a.ids(rid), b.ids(rid))
+
+
+def test_runtime_ids_invariant_to_batch_composition(system):
+    """Per-request ids must not depend on micro-batch composition: wildly
+    different scheduler policies (and the per-request loop itself) agree."""
+    _, eng, qs, preds = system
+    trace = _trace(qs, preds, n=80)
+    big = OnlineRuntime(eng, SchedulerConfig(max_batch=64, max_wait=0.02)).run_trace(trace)
+    solo = OnlineRuntime(eng, SchedulerConfig(max_batch=1, max_wait=0.0)).run_trace(trace)
+    assert big.batches != solo.batches          # compositions genuinely differ
+    for r in trace:
+        direct = eng.query(r.query, r.pred, r.k)
+        assert np.array_equal(big.ids(r.rid), solo.ids(r.rid))
+        assert np.array_equal(big.ids(r.rid), direct.result.ids[0])
+        assert big.results[r.rid].decision == direct.decision
+
+
+def test_runtime_every_request_answered_once(system):
+    _, eng, qs, preds = system
+    trace = _trace(qs, preds, n=100, kind="bursty")
+    rep = OnlineRuntime(eng, SchedulerConfig(max_batch=8)).run_trace(trace)
+    served = [rid for batch in rep.batches for rid in batch]
+    assert sorted(served) == list(range(100))
+    assert sorted(rep.results) == list(range(100))
+    assert rep.telemetry.counters()["n_completed"] == 100
+
+
+# ----------------------------------------------------------------------
+# scheduler policy
+# ----------------------------------------------------------------------
+def _req(rid, t, q, pred, tier="standard", deadline=None):
+    return RuntimeRequest(
+        rid=rid, t_arrival=t, query=q, pred=pred, k=K, tier=tier,
+        deadline=t + SLO_TIERS[tier] if deadline is None else deadline,
+    )
+
+
+def test_deadline_priority_preempts_batch_formation(system):
+    """A tight-deadline arrival must (a) flush the forming batch before
+    max_wait expires and (b) run at the head of that batch."""
+    from repro.runtime.queue import ArrivalTrace
+
+    _, eng, qs, preds = system
+    q, p = qs[0], preds[0]
+    service = ServiceModel()
+    # three bulk requests trickle in, then an interactive one: with
+    # max_wait=10s the only reason to flush early is deadline pressure
+    reqs = [
+        _req(0, 0.000, q, p, tier="batch"),
+        _req(1, 0.001, q, p, tier="batch"),
+        _req(2, 0.002, q, p, tier="batch"),
+        _req(3, 0.003, q, p, tier="interactive"),
+    ]
+    trace = ArrivalTrace(reqs, "poisson", 1000.0, 0)
+    rep = OnlineRuntime(
+        eng, SchedulerConfig(max_batch=64, max_wait=10.0), service,
+    ).run_trace(trace)
+    assert len(rep.batches) == 1
+    assert rep.batches[0][0] == 3               # tightest deadline drains first
+    tel = rep.telemetry.counters()
+    assert tel["deadline_flushes"] == 1
+    assert tel["deadline_met"].get("interactive", 0) == 1
+    # flush happened at SLO pressure, far before the 10 s max_wait
+    snap = rep.telemetry.snapshot()
+    assert snap["latency_virtual"]["max"] < 1.0
+
+
+def test_max_wait_bounds_queue_age(system):
+    """Without deadline pressure, the oldest request waits at most max_wait
+    before its batch flushes."""
+    _, eng, qs, preds = system
+    trace = _trace(qs, preds, n=60, rate=500.0, seed=11)
+    max_wait = 0.004
+    rep = OnlineRuntime(
+        eng, SchedulerConfig(max_batch=64, max_wait=max_wait)
+    ).run_trace(trace)
+    snap = rep.telemetry.snapshot()
+    service_bound = ServiceModel().estimate(64)
+    # wait-to-flush <= max_wait + service backlog of at most one batch
+    assert snap["queue_wait_virtual"]["max"] <= max_wait + service_bound + 1e-9
+
+
+def test_sharded_runtime_matches_sharded_query(system):
+    _, eng, qs, preds = system
+    sharded = ShardedANNEngine(eng, n_shards=3)
+    trace = _trace(qs, preds, n=40, seed=8)
+    rep = sharded.runtime(SchedulerConfig(max_batch=16)).run_trace(trace)
+    for r in trace:
+        direct = sharded.query(r.query, r.pred, r.k)
+        assert np.array_equal(rep.ids(r.rid), direct.result.ids[0])
+    # aggregated stats surface central + per-shard cache counters
+    s = sharded.stats()
+    assert s["shard_pred_cache"]["n_shards"] == 3
+    assert s["plan_cache"]["hits"] > 0
+
+
+# ----------------------------------------------------------------------
+# telemetry
+# ----------------------------------------------------------------------
+def test_telemetry_counters_consistent(system):
+    _, eng, qs, preds = system
+    trace = _trace(qs, preds, n=90, seed=13)
+    rep = OnlineRuntime(eng, SchedulerConfig(max_batch=16)).run_trace(trace)
+    tel = rep.telemetry.counters()
+    assert tel["n_completed"] == 90
+    assert sum(tel["plan_counts"].values()) == 90
+    assert sum(n * c for n, c in tel["batch_sizes"].items()) == 90
+    met = sum(tel["deadline_met"].values())
+    missed = sum(tel["deadline_missed"].values())
+    assert met + missed == 90
+    assert 0.0 <= tel["fill_rate"] <= 1.0
+    snap = rep.telemetry.snapshot(eng)
+    assert snap["engine"]["pred_cache"]["hits"] > 0       # hot Zipf predicates
+    assert snap["engine"]["plan_cache"]["hits"] > 0
+    assert snap["wall"]["exec_s"] > 0
+
+
+# ----------------------------------------------------------------------
+# plan cache semantics (engine-side hook the runtime leans on)
+# ----------------------------------------------------------------------
+def test_plan_cache_purity_and_invalidation(system):
+    _, eng, qs, preds = system
+    p = preds[0]
+    eng.plan_cache.clear()
+    est0, dec0, _ = eng.plan(p, K)
+    h0 = eng.plan_cache.stats()["hits"]
+    est1, dec1, _ = eng.plan(p, K)
+    assert (est1, dec1) == (est0, dec0)
+    assert eng.plan_cache.stats()["hits"] == h0 + 1
+    # k is part of the key: a different k may plan differently
+    eng.plan(p, K + 1)
+    assert eng.plan_cache.stats()["size"] >= 2
+    # batch path shares the same cache and returns identical values
+    ests, decs, _ = eng.plan_batch([p, p], K)
+    assert ests[0] == est0 and decs[0] == dec0
+    # swapping the head invalidates memoised plans
+    ver = eng.planner_version
+    eng.swap_planner(CorePlanner(seed=1))
+    assert eng.planner_version == ver + 1
+    assert eng.plan_cache.stats()["size"] == 0
+    # a DIRECT estimator refit (bypassing engine.fit) must also invalidate:
+    # the epoch guard compares (planner_version, estimator.generation)
+    ds = system[0]
+    _, ps, sels = gen_queries(ds.vectors, ds.cat, ds.num, 8,
+                              kinds=("label", "mixed"), seed=41)
+    eng.plan(p, K)
+    assert len(eng.plan_cache) >= 1
+    eng.estimator.fit(list(ps), list(sels))
+    est2, dec2, _ = eng.plan(p, K)
+    assert (est2, dec2) == eng._plan_cold(p, K)   # fresh, not the stale memo
+
+
+def test_engine_stats_accessor_dnf(system):
+    """Satellite: `stats()` is the public counter surface, and DNF predicates
+    flow through the runtime like any conjunctive predicate."""
+    _, eng, qs, preds = system
+    dnf = Or((Predicate(labels=(LabelEq(0, 0),)), preds[0]))
+    from repro.runtime.queue import ArrivalTrace
+
+    reqs = [_req(i, 0.001 * i, qs[i % len(qs)], dnf) for i in range(6)]
+    rep = OnlineRuntime(eng, SchedulerConfig(max_batch=8)).run_trace(
+        ArrivalTrace(reqs, "poisson", 1000.0, 0))
+    st = eng.stats()
+    assert {"planner_version", "pred_cache", "plan_cache"} <= set(st)
+    for r in rep.results.values():
+        ids = r.result.ids[r.result.ids >= 0]
+        ds = system[0]
+        assert dnf.eval(ds.cat[ids], ds.num[ids]).all()
+
+
+# ----------------------------------------------------------------------
+# feedback loop
+# ----------------------------------------------------------------------
+def _threshold_labeler(eng, cut=0.08):
+    """Deterministic oracle: post-filter wins above the selectivity cut."""
+    def labeler(req):
+        est, _ = eng.estimator.estimate_ex(req.pred)
+        return POST_FILTER if est >= cut else PRE_FILTER
+    return labeler
+
+
+def _fold(d: int) -> int:
+    return POST_FILTER if d == POST_FILTER else PRE_FILTER
+
+
+def test_feedback_recovers_warped_planner(system):
+    """A head fit on inverted labels must recover once the online log —
+    labelled by a deterministic oracle here — is replayed through refit."""
+    ds, eng, qs, preds = system
+    labeler = _threshold_labeler(eng)
+    # warp: train on the INVERTED oracle
+    feats, bad = [], []
+    for p in preds:
+        est, exact = eng.estimator.estimate_ex(p)
+        feats.append(eng.feat.vector(p, est, K, exact))
+        bad.append(PRE_FILTER if est >= 0.08 else POST_FILTER)
+    eng.swap_planner(CorePlanner(seed=3).fit(np.stack(feats), np.asarray(bad)))
+
+    def acc():
+        good = 0
+        for p, fv in zip(preds, feats):
+            want = labeler(RuntimeRequest(0, 0.0, qs[0], p, K))
+            good += int(_fold(int(eng.planner.decide(fv)[0])) == want)
+        return good / len(preds)
+
+    acc_warped = acc()
+    fb = OnlineFeedback(eng, FeedbackConfig(
+        sample_rate=1.0, refit_every=60, min_examples=40, seed=0,
+    ), labeler=labeler)
+    trace = _trace(qs, preds, n=140, seed=17)
+    OnlineRuntime(eng, SchedulerConfig(max_batch=32), feedback=fb).run_trace(trace)
+    assert fb.n_swaps >= 1
+    acc_rec = acc()
+    assert acc_rec >= 0.85, f"recovered accuracy {acc_rec} (warped {acc_warped})"
+    assert acc_rec > acc_warped
+    st = fb.stats()
+    assert st["sampled"] == st["observed"] == 140
+
+
+def test_feedback_drift_guard_blocks_regressions(system):
+    """An impossible AUC bar must keep the current head (guard wiring), and
+    degenerate single-class logs must never trigger a refit."""
+    ds, eng, qs, preds = system
+    labeler = _threshold_labeler(eng)
+    fb = OnlineFeedback(eng, FeedbackConfig(
+        sample_rate=1.0, refit_every=10**9, min_examples=20,
+        auc_slack=-10.0,            # candidate must beat current by 10 AUC
+        seed=0,
+    ), labeler=labeler)
+    for r in _trace(qs, preds, n=60, seed=19):
+        fb.observe(r, eng.query(r.query, r.pred, r.k))
+    before = eng.planner
+    ver = eng.planner_version
+    assert fb.refit() is False
+    assert eng.planner is before and eng.planner_version == ver
+    # degenerate labels: refit declines without touching the head
+    fb2 = OnlineFeedback(eng, FeedbackConfig(sample_rate=1.0, seed=0),
+                         labeler=lambda req: PRE_FILTER)
+    for r in _trace(qs, preds, n=40, seed=23):
+        fb2.observe(r, eng.query(r.query, r.pred, r.k))
+    assert fb2.refit() is False
+    assert eng.planner is before
+
+
+def test_feedback_requires_built_engine(system):
+    ds, *_ = system
+    stats_only = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num, EngineConfig(seed=0)
+    ).build_stats()
+    with pytest.raises(ValueError, match="fully built"):
+        OnlineFeedback(stats_only)
+
+
+def test_feedback_sampling_is_seeded(system):
+    _, eng, qs, preds = system
+    labeler = _threshold_labeler(eng)
+    trace = _trace(qs, preds, n=50, seed=29)
+    picks = []
+    for _ in range(2):
+        fb = OnlineFeedback(eng, FeedbackConfig(
+            sample_rate=0.3, refit_every=10**9, seed=7), labeler=labeler)
+        res = [eng.query(r.query, r.pred, r.k) for r in trace]
+        picks.append([fb.observe(r, x) for r, x in zip(trace, res)])
+    assert picks[0] == picks[1]
+    assert 0 < sum(picks[0]) < 50
