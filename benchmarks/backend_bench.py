@@ -1,0 +1,217 @@
+"""Backend-registry benchmark: static (backend, knob) configs vs the learned
+(plan, backend, knob) router.
+
+For every registered backend class the static baseline answers EVERY query
+the same way (predicate mask + ``search_masked`` at that tier — what a
+deployment pinned to one index does), while the routed engine plans per
+query over the full decision space (pre / indexed-pre / post x backend x
+knob).  Reports, per config: mean end-to-end latency, recall@10 against the
+exact masked oracle, and the scan-resident memory footprint.
+
+Headline claims recorded in ``BENCH_backend.json`` (committed at the 100k
+scale, scale-suffixed + gitignored otherwise):
+
+* the routed planner beats the best static single-backend config on mean
+  latency among configs meeting the recall floor;
+* IVF-PQ holds >= 4x less scan-resident memory than flat at >= 0.9
+  recall@10 on the 100k corpus.
+
+    PYTHONPATH=src python -m benchmarks.backend_bench            # N = 100k
+    REPRO_BENCH_SCALE=5000 PYTHONPATH=src python -m benchmarks.backend_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import EngineConfig, FilteredANNEngine, recall_at_k
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+from repro.index import DEFAULT_BACKENDS
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+K = 10
+N_EVAL = 40            # evaluation queries
+RECALL_FLOOR = 0.90    # the equal-recall bar for the latency comparison
+REPEATS = 3            # timing repeats per config (min taken)
+
+
+def _resolve_n() -> int:
+    scale = os.environ.get("REPRO_BENCH_SCALE", "small")
+    if scale == "small":
+        return 30_000
+    if scale == "reduced":
+        return 100_000
+    return int(scale)
+
+
+def _recall(ids, truth):
+    return float(np.mean([recall_at_k(i[None], t) for i, t in zip(ids, truth)]))
+
+
+def bench_static(eng, backend_set, qs, preds, truth):
+    """Every (backend, tier) class as a pinned config: per query, evaluate
+    the predicate mask (charged — a pinned deployment pays it too) and run
+    the masked search at that tier."""
+    rows = []
+    classes = backend_set.classes()
+    for ci, (bname, tier) in enumerate(classes):
+        best_t = float("inf")
+        ids_all = None
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            ids_run = []
+            for q, p in zip(qs, preds):
+                mask = eng.ipre_exec.candidate_mask(p)
+                _, ids = backend_set.search_class(ci, q[None], mask, K)
+                ids_run.append(ids[0])
+            best_t = min(best_t, time.perf_counter() - t0)
+            ids_all = ids_run
+        rec = _recall(ids_all, truth)
+        rows.append({
+            "config": f"{bname}:{tier}",
+            "mean_us": round(best_t / len(qs) * 1e6, 1),
+            "recall": round(rec, 4),
+        })
+        print(f"  static {bname}:{tier:9s} {rows[-1]['mean_us']:9.1f} us/q  "
+              f"recall {rec:.3f}")
+    return rows
+
+
+def bench_routed(eng, qs, preds, truth):
+    best_t = float("inf")
+    ids_all = None
+    for _ in range(REPEATS):
+        eng.plan_cache.clear()
+        t0 = time.perf_counter()
+        outs = eng.batch_query(np.stack(qs), list(preds), k=K)
+        best_t = min(best_t, time.perf_counter() - t0)
+        ids_all = [o.result.ids[0] for o in outs]
+    rec = _recall(ids_all, truth)
+    mix = {}
+    for o in outs:
+        key = f"{o.result.strategy}/{o.result.backend}:{o.result.knob}"
+        mix[key] = mix.get(key, 0) + 1
+    row = {
+        "config": "routed",
+        "mean_us": round(best_t / len(qs) * 1e6, 1),
+        "recall": round(rec, 4),
+        "mix": dict(sorted(mix.items())),
+    }
+    print(f"  ROUTED {'':10s} {row['mean_us']:9.1f} us/q  recall {rec:.3f}  "
+          f"mix={row['mix']}")
+    return row
+
+
+def main():
+    n = _resolve_n()
+    print(f"backend_bench: N={n} (arxiv), K={K}, {N_EVAL} eval queries")
+    ds = make_dataset("arxiv", scale=str(n), seed=0)
+
+    t0 = time.perf_counter()
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num,
+        EngineConfig(seed=0, backends=DEFAULT_BACKENDS),
+    ).build()
+    t_build = time.perf_counter() - t0
+    tq, tp, _ = gen_queries(ds.vectors, ds.cat, ds.num, 48,
+                            kinds=ds.filter_kinds, seed=1)
+    t0 = time.perf_counter()
+    eng.fit(tq, tp, k=K)
+    t_fit = time.perf_counter() - t0
+    print(f"  build {t_build:.1f}s (backends incl.)  fit+route {t_fit:.1f}s")
+
+    qs, preds, sels = gen_queries(
+        ds.vectors, ds.cat, ds.num, N_EVAL, kinds=ds.filter_kinds,
+        sel_range=(0.01, 0.4), seed=7,
+    )
+    truth = [eng.ground_truth(q, p, K) for q, p in zip(qs, preds)]
+
+    mem = eng.backend_set.memory_bytes()
+    print("  memory_bytes:", {k: f"{v/1e6:.1f}MB" for k, v in mem.items()})
+
+    static_rows = bench_static(eng, eng.backend_set, qs, preds, truth)
+    routed_row = bench_routed(eng, qs, preds, truth)
+
+    # headline 1: routed vs the best static config at EQUAL recall — a
+    # pinned config only competes if it reaches the recall the routed
+    # planner actually delivered.  The 0.01 tolerance absorbs run-to-run
+    # recall jitter from XLA CPU's multi-threaded reduction order (near-tie
+    # top-k membership shifts a row or two per run).
+    bar = max(RECALL_FLOOR, routed_row["recall"] - 0.01)
+    eligible = [r for r in static_rows if r["recall"] >= bar]
+    best_static = min(eligible, key=lambda r: r["mean_us"]) if eligible else None
+    speedup = (best_static["mean_us"] / routed_row["mean_us"]) if best_static else None
+    # headline 2: IVF-PQ memory reduction vs flat at >= 0.9 recall@10.
+    # memory_bytes is knob-independent, so the recall side follows the
+    # standard ANN memory/recall protocol: measured UNFILTERED (mask=None)
+    # at the cheapest search-time operating point that clears 0.9
+    # recall@10.  The filtered static rows above show the same index
+    # under predicate masks at its declared tiers.
+    pq = eng.backend_set.backends["ivfpq"]
+    from repro.index import l2_topk
+    _, truth_unf = l2_topk(np.stack(qs), ds.vectors, K)
+    truth_unf = list(np.asarray(truth_unf)[:, None, :])
+    pq_unf = None
+    for knobs in ({"nprobe": 64, "rerank": 256}, {"nprobe": 96, "rerank": 512},
+                  {"nprobe": 128, "rerank": 1024}, {"nprobe": 256, "rerank": 2048}):
+        t0 = time.perf_counter()
+        _, pq_ids = pq.search_masked(np.stack(qs), None, K, knobs=knobs)
+        dt = time.perf_counter() - t0
+        pq_unf = {"knobs": knobs,
+                  "recall": round(_recall(list(pq_ids), truth_unf), 4),
+                  "mean_us": round(dt / len(qs) * 1e6, 1)}
+        if pq_unf["recall"] >= 0.9:
+            break
+    pq_rec = max(r["recall"] for r in static_rows if r["config"].startswith("ivfpq"))
+    mem_reduction = mem["flat"] / max(mem["ivfpq"], 1)
+
+    out = {
+        "n": n, "dataset": "arxiv", "k": K, "n_eval": N_EVAL,
+        "recall_floor": RECALL_FLOOR,
+        "memory_bytes": mem,
+        "static": static_rows,
+        "routed": routed_row,
+        "equal_recall_bar": round(bar, 4),
+        "best_static_at_equal_recall": best_static,
+        "routed_speedup_vs_best_static": round(speedup, 3) if speedup else None,
+        "ivfpq_mem_reduction_vs_flat": round(mem_reduction, 2),
+        "ivfpq_best_filtered_recall": round(pq_rec, 4),
+        "ivfpq_unfiltered": pq_unf,
+    }
+    if best_static:
+        print(f"  best static at recall>={bar:.3f}: {best_static['config']} "
+              f"{best_static['mean_us']:.1f} us/q -> routed speedup {speedup:.2f}x")
+    print(f"  ivfpq memory reduction vs flat: {mem_reduction:.1f}x "
+          f"(unfiltered recall {pq_unf['recall']:.3f} at {pq_unf['knobs']}, "
+          f"best filtered {pq_rec:.3f})")
+
+    name = "BENCH_backend.json" if n == 100_000 else f"BENCH_backend_n{n}.json"
+    path = REPO_ROOT / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"  wrote {path}")
+    return out
+
+
+def run():
+    """`benchmarks/run.py` adaptor: one row per config plus the headline."""
+    out = main()
+    rows = [
+        {"config": r["config"], "mean_us": r["mean_us"], "recall": r["recall"]}
+        for r in out["static"]
+    ]
+    rows.append({
+        "config": "routed", "mean_us": out["routed"]["mean_us"],
+        "recall": out["routed"]["recall"],
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("REPRO_BENCH_SCALE", "reduced")   # 100k standalone
+    main()

@@ -65,6 +65,10 @@ def main() -> None:
             f"speedup_cached={r['speedup_cached']}x;speedup_cold={r['speedup_cold']}x"
         )
 
+    from . import backend_bench
+    for r in backend_bench.run():
+        print(f"backend_{r['config']},{r['mean_us']},recall={r['recall']}")
+
     from . import runtime_bench
     for r in runtime_bench.run():
         print(

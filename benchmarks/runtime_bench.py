@@ -122,7 +122,7 @@ def _replay_section(eng, qs, preds, seed: int):
 def _oracle_labels(eng, qs, preds):
     """Measured ground-truth win labels — the engine's shared §3.1 rule."""
     return np.asarray(
-        [eng.label_query(q, p, K)[0] for q, p in zip(qs, preds)], np.int32
+        [eng.label_query(q, p, K).label for q, p in zip(qs, preds)], np.int32
     )
 
 

@@ -13,22 +13,31 @@ from repro.core import (
     EngineConfig, FilteredANNEngine, LabelEq, Not, Or, Predicate, RangePred,
     recall_at_k,
 )
-from repro.core.executors import AcornExec
 from repro.core.trainer import gen_queries
 from repro.data import make_dataset
-from repro.index import AcornIndex
+from repro.index import make_backend
 
 K = 10
 ds = make_dataset("glove200", scale="20000", seed=0)
 eng = FilteredANNEngine(ds.vectors, ds.cat, ds.num, EngineConfig(seed=0)).build()
 tq, tp, _ = gen_queries(ds.vectors, ds.cat, ds.num, 40, kinds=("range",), seed=1)
 eng.fit(tq, tp, k=K)
-print("building ACORN-1 graph baseline...")
+print("building ACORN-1 graph baseline (via the backend registry)...")
 t0 = time.perf_counter()
-acorn = AcornIndex(ds.vectors, m=24, seed=0).build()
+acorn = make_backend("acorn", ds.vectors, seed=0)
 print(f"  acorn build {time.perf_counter()-t0:.1f}s "
       f"(planner build was {eng.build_time_['stats']+eng.build_time_['ivf']+eng.build_time_['fit']:.1f}s)")
-acorn_exec = AcornExec(acorn, ds.cat, ds.num, ef=64)
+
+
+class _AcornRes:
+    """Adapter giving the registry backend the (ids, elapsed) result shape
+    the side-by-side loop below expects."""
+
+    def __init__(self, q, p):
+        t0 = time.perf_counter()
+        _, self.ids = acorn.search_masked(q, p.eval(ds.cat, ds.num), K,
+                                          knobs={"ef": 64})
+        self.elapsed = time.perf_counter() - t0
 
 for lo, hi in [(0.01, 0.02), (0.08, 0.12), (0.25, 0.35)]:
     qs, preds, sels = gen_queries(
@@ -40,7 +49,7 @@ for lo, hi in [(0.01, 0.02), (0.08, 0.12), (0.25, 0.35)]:
         for mname, fn in [
             ("pre", lambda: eng.pre_exec.search(qs[i][None], p, K)),
             ("post", lambda: eng.post_exec.search(qs[i][None], p, K)),
-            ("acorn", lambda: acorn_exec.search(qs[i][None], p, K)),
+            ("acorn", lambda: _AcornRes(qs[i][None], p)),
             ("planner", lambda: eng.query(qs[i], p, K).result),
         ]:
             res = fn()

@@ -3,10 +3,10 @@ from .stats import DatasetStats
 from .selectivity import SelectivityEstimator
 from .planner import CorePlanner, PlannerFeatures, PRE_FILTER, POST_FILTER, INDEXED_PRE
 from .executors import (
-    PreFilterExec, IndexedPreFilterExec, PostFilterExec, AcornExec,
+    PreFilterExec, IndexedPreFilterExec, PostFilterExec,
     SearchResult, recall_at_k,
 )
-from .engine import FilteredANNEngine, EngineConfig, PlannedResult, CorpusShard
+from .engine import FilteredANNEngine, EngineConfig, PlannedResult, CorpusShard, QueryLabel
 from .trainer import gen_queries, gen_predicate
 from .gbm import GradientBoostingRegressor
 
@@ -15,9 +15,9 @@ __all__ = [
     "iter_leaves", "NULL_CODE",
     "DatasetStats", "SelectivityEstimator",
     "CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER", "INDEXED_PRE",
-    "PreFilterExec", "IndexedPreFilterExec", "PostFilterExec", "AcornExec",
+    "PreFilterExec", "IndexedPreFilterExec", "PostFilterExec",
     "SearchResult", "recall_at_k",
-    "FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard",
+    "FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard", "QueryLabel",
     "gen_queries", "gen_predicate",
     "GradientBoostingRegressor",
 ]

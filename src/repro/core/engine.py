@@ -20,6 +20,7 @@ import numpy as np
 # partially-initialised package.
 from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
+from ..index.registry import BackendSet
 from .executors import (
     IndexedPreFilterExec,
     PostFilterExec,
@@ -32,7 +33,8 @@ from .predicates import AnyPredicate
 from .selectivity import SelectivityEstimator
 from .stats import DatasetStats
 
-__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard", "PlanCache"]
+__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard",
+           "PlanCache", "QueryLabel"]
 
 
 @dataclasses.dataclass
@@ -47,6 +49,14 @@ class EngineConfig:
     range_buckets: int = 128           # filter.ranges.DEFAULT_BUCKETS
     pred_cache_size: int = 256         # compiled-predicate LRU entries
     plan_cache_size: int = 1024        # memoised (predicate, k) plan entries
+    # registered ANN backends to race/route over (repro.index.registry
+    # names).  None keeps the legacy plan-only engine: no BackendSet is
+    # built, the decision space stays (pre, post, ipre), and every code
+    # path is bit-identical to before the routing extension existed.
+    backends: Optional[Tuple[str, ...]] = None
+    # recall@k a (backend, knob) class must hit on a training query before
+    # utility gets a say in the routing label; below it, max-recall wins.
+    route_recall_target: float = 0.9
 
 
 @dataclasses.dataclass
@@ -57,7 +67,38 @@ class PlannedResult:
     plan_overhead: float               # seconds spent estimating + deciding
 
 
+@dataclasses.dataclass
+class QueryLabel:
+    """Outcome of one §3.1 utility race (see :meth:`label_query`).
+
+    ``route`` is the argmax (backend, knob-tier) class when a BackendSet was
+    raced, else -1; ``route_utils`` holds the per-class utilities."""
+
+    label: int                         # PRE_FILTER or POST_FILTER
+    true_sel: float
+    u_pre: float
+    u_post: float
+    route: int = -1
+    route_utils: Optional[np.ndarray] = None
+
+    def __iter__(self):
+        # legacy tuple unpacking: label, true_sel, u_pre, u_post
+        return iter((self.label, self.true_sel, self.u_pre, self.u_post))
+
+
 STRATEGY_NAMES = {PRE_FILTER: "pre", POST_FILTER: "post", INDEXED_PRE: "ipre"}
+
+# route value meaning "no routed backend": execute POST rows on the legacy
+# lazy α-doubling post-filter path (bit-identical to the pre-routing engine)
+NO_ROUTE = -1
+
+
+def _default_route_name(decision: int) -> Tuple[str, str]:
+    """(backend, knob) labels for un-routed rows: both pre-filter plans are
+    exact masked scans, the legacy post path is the adaptive IVF executor."""
+    if decision == POST_FILTER:
+        return "ivf", "adapt"
+    return "flat", "exact"
 
 
 def package_results(
@@ -68,19 +109,28 @@ def package_results(
     decisions: np.ndarray,
     share: float,
     plan_share: float,
+    route_names: Optional[Sequence[Optional[Tuple[str, str]]]] = None,
 ) -> List[PlannedResult]:
     """Wrap batched (B, k) arrays into per-row PlannedResults — one
     packaging convention for the flat and sharded batch paths (``share`` is
-    the batch wall time split evenly across rows, plan overhead included)."""
-    return [
-        PlannedResult(
+    the batch wall time split evenly across rows, plan overhead included).
+    ``route_names[j]`` is the routed (backend, knob-tier) pair for row j or
+    None for un-routed rows (default naming by decision)."""
+    out = []
+    for j in range(len(ests)):
+        dec = int(decisions[j])
+        if route_names is not None and route_names[j] is not None:
+            bk, knob = route_names[j]
+        else:
+            bk, knob = _default_route_name(dec)
+        out.append(PlannedResult(
             SearchResult(d[j : j + 1], ids[j : j + 1], share,
-                         STRATEGY_NAMES[int(decisions[j])],
-                         n_expansions=int(rounds[j])),
-            float(ests[j]), int(decisions[j]), plan_share,
-        )
-        for j in range(len(ests))
-    ]
+                         STRATEGY_NAMES[dec],
+                         n_expansions=int(rounds[j]),
+                         backend=bk, knob=knob),
+            float(ests[j]), dec, plan_share,
+        ))
+    return out
 
 
 def _execute_grouped(
@@ -92,6 +142,8 @@ def _execute_grouped(
     k: int,
     decisions: np.ndarray,
     ests: np.ndarray,
+    routes: Optional[np.ndarray] = None,
+    backend_set: Optional[BackendSet] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Decision-grouped batch execution — the ONE implementation behind both
     the flat (`FilteredANNEngine.batch_query`) and sharded
@@ -99,9 +151,13 @@ def _execute_grouped(
 
     The two pre-filter groups (scan-masked and bitmap-masked) each evaluate
     every distinct predicate's mask once and run one fused masked top-k over
-    all queries sharing it; the post-filter group runs one row-faithful
-    batched IVF search.  Returns
-    ``(dists (B, k), ids (B, k) local, expansion_rounds (B,))``.
+    all queries sharing it; un-routed post-filter rows run one row-faithful
+    batched IVF search.  With ``routes``/``backend_set``, post-filter rows
+    carrying a routing class >= 0 group by (class, predicate): each group
+    evaluates its predicate mask once (through the bitmap index when
+    covered) and runs ONE ``search_masked`` call on the routed backend —
+    the (decision, backend, knob) extension of PR 2's decision grouping.
+    Returns ``(dists (B, k), ids (B, k) local, expansion_rounds (B,))``.
     """
     b = len(preds)
     out_d = np.full((b, k), np.inf, np.float32)
@@ -115,7 +171,11 @@ def _execute_grouped(
         for pred, rows in groups.items():
             res = ex.search(queries[rows], pred, k)
             out_d[rows], out_i[rows] = res.dists, res.ids
-    post_rows = [i for i in range(b) if decisions[i] == POST_FILTER]
+    routed = routes is not None and backend_set is not None
+    post_rows = [
+        i for i in range(b)
+        if decisions[i] == POST_FILTER and not (routed and routes[i] >= 0)
+    ]
     if post_rows:
         d, ids, rnd = post_exec.search_rows(
             queries[post_rows], [preds[i] for i in post_rows], k,
@@ -123,11 +183,23 @@ def _execute_grouped(
         )
         out_d[post_rows], out_i[post_rows] = d, ids
         rounds[post_rows] = rnd
+    if routed:
+        groups = {}
+        for i in range(b):
+            if decisions[i] == POST_FILTER and routes[i] >= 0:
+                groups.setdefault((int(routes[i]), preds[i]), []).append(i)
+        mask_ex = ipre_exec or pre_exec
+        masks: dict = {}
+        for (ci, pred), rows in groups.items():
+            if pred not in masks:
+                masks[pred] = mask_ex.candidate_mask(pred)
+            d, ids = backend_set.search_class(ci, queries[rows], masks[pred], k)
+            out_d[rows], out_i[rows] = d[:, :k], ids[:, :k]
     return out_d, out_i, rounds
 
 
 class PlanCache:
-    """LRU memo of ``(canonical predicate key, k) -> (est, decision)``.
+    """LRU memo of ``(canonical predicate key, k) -> (est, decision, route)``.
 
     Serving traffic repeats predicates constantly; planning the same
     predicate is pure — the decision depends only on predicate + dataset
@@ -144,7 +216,7 @@ class PlanCache:
     def __init__(self, capacity: int = 1024):
         assert capacity >= 1
         self.capacity = capacity
-        self._store: "OrderedDict[Tuple, Tuple[float, int]]" = OrderedDict()
+        self._store: "OrderedDict[Tuple, Tuple[float, int, int]]" = OrderedDict()
         self.epoch: Tuple = ()        # engine._plan_epoch() the memo is valid under
         self.hits = 0
         self.misses = 0
@@ -161,7 +233,7 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._store)
 
-    def get(self, key) -> Optional[Tuple[float, int]]:
+    def get(self, key) -> Optional[Tuple[float, int, int]]:
         hit = self._store.get(key)
         if hit is None:
             self.misses += 1
@@ -170,7 +242,7 @@ class PlanCache:
         self._store.move_to_end(key)
         return hit
 
-    def put(self, key, value: Tuple[float, int]) -> None:
+    def put(self, key, value: Tuple[float, int, int]) -> None:
         self._store[key] = value
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
@@ -202,6 +274,7 @@ class CorpusShard:
     pre_exec: PreFilterExec
     post_exec: PostFilterExec
     ipre_exec: Optional[IndexedPreFilterExec] = None
+    backend_set: Optional[BackendSet] = None   # per-shard backend instances
 
     def search(
         self,
@@ -210,12 +283,22 @@ class CorpusShard:
         k: int,
         decision: int,
         est_selectivity: Optional[float] = None,
+        route: int = NO_ROUTE,
     ) -> SearchResult:
-        """Run the planned executor on this shard; returns GLOBAL ids."""
+        """Run the planned executor on this shard; returns GLOBAL ids.
+        ``route >= 0`` sends a post-filter row to that (backend, knob-tier)
+        class of the shard's BackendSet instead of the lazy post path."""
         if decision == INDEXED_PRE:
             res = (self.ipre_exec or self.pre_exec).search(q, pred, k)
         elif decision == PRE_FILTER:
             res = self.pre_exec.search(q, pred, k)
+        elif route >= 0 and self.backend_set is not None:
+            t0 = time.perf_counter()
+            mask = (self.ipre_exec or self.pre_exec).candidate_mask(pred)
+            d, ids = self.backend_set.search_class(route, q, mask, k)
+            bk, knob = self.backend_set.classes()[route]
+            res = SearchResult(d, ids, time.perf_counter() - t0, "post",
+                               backend=bk, knob=knob)
         else:
             res = self.post_exec.search(q, pred, k, est_selectivity=est_selectivity)
         res.ids = self._to_global(res.ids)
@@ -232,6 +315,7 @@ class CorpusShard:
         k: int,
         decisions: np.ndarray,
         ests: np.ndarray,
+        routes: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Run a whole planned batch on this shard (decision-grouped, same
         shared ``_execute_grouped`` core as
@@ -241,6 +325,7 @@ class CorpusShard:
         out_d, out_i, rounds = _execute_grouped(
             self.pre_exec, self.ipre_exec, self.post_exec,
             queries, preds, k, decisions, ests,
+            routes=routes, backend_set=self.backend_set,
         )
         return out_d, self._to_global(out_i), rounds
 
@@ -296,6 +381,7 @@ class FilteredANNEngine:
         )
         self.planner = CorePlanner(seed=self.config.seed)
         self.feat = PlannerFeatures(self.dataset_stats)
+        self.backend_set: Optional[BackendSet] = None   # built by build()
         self.build_time_["stats"] = t1 - t0
         self.build_time_["attr_index"] = t2 - t1
         return self
@@ -314,6 +400,12 @@ class FilteredANNEngine:
             self.ivf, self.cat, self.num,
             alpha0=self.config.alpha0, nprobe0=self.config.nprobe0,
         )
+        if self.config.backends:
+            t_b = time.perf_counter()
+            self.backend_set = BackendSet.build(
+                self.vectors, self.config.backends, seed=self.config.seed
+            )
+            self.build_time_["backends"] = time.perf_counter() - t_b
         # warm the jit'd pre-filter bucket shapes: per-query utility timings
         # (planner training labels, §3.1) must not include one-off XLA
         # compiles — a cold bucket inflates T_search by ~100x and mislabels
@@ -345,15 +437,26 @@ class FilteredANNEngine:
 
     # ------------------------------------------------------------------
     def label_query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10,
-                    ) -> Tuple[int, float, float, float]:
+                    ) -> QueryLabel:
         """Paper §3.1 utility labelling — the ONE definition shared by the
         offline :meth:`fit` loop, the online feedback loop's shadow
         labeller, and the benchmarks' oracle: run BOTH strategies against
         the exact masked top-k and pick the winner by utility
-        U = recall@k / T_search.  Returns
-        ``(label, true_selectivity, u_pre, u_post)``."""
+        U = recall@k / T_search.
+
+        With a built BackendSet, every registered (backend, knob-tier)
+        class is raced under the same rule (mask evaluation charged to each
+        contender, since routed execution pays it at serve time); the
+        winning class — highest utility among classes whose measured recall
+        meets ``config.route_recall_target``, max-recall when none do —
+        becomes the routing label and its utility competes as the post-side
+        champion, so a backend that beats BOTH the exact scan and the lazy
+        post path wins the plan decision too.  Returns a
+        :class:`QueryLabel` (legacy 4-tuple unpacking still works)."""
         q = np.atleast_2d(q)
+        t_m0 = time.perf_counter()
         mask = pred.eval(self.cat, self.num)
+        t_mask = time.perf_counter() - t_m0
         true_sel = float(mask.mean())
         _, ti = l2_topk(q, self.vectors, k, mask)             # exact ground truth
         ti = np.asarray(ti)
@@ -361,8 +464,30 @@ class FilteredANNEngine:
         r_post = self.post_exec.search(q, pred, k, est_selectivity=true_sel)
         u_pre = recall_at_k(r_pre.ids, ti) / max(r_pre.elapsed, 1e-7)
         u_post = recall_at_k(r_post.ids, ti) / max(r_post.elapsed, 1e-7)
+        route, route_utils = NO_ROUTE, None
+        if self.backend_set is not None:
+            classes = self.backend_set.classes()
+            n_c = len(classes)
+            route_utils = np.zeros(n_c, np.float64)
+            recalls = np.zeros(n_c, np.float64)
+            for ci in range(n_c):
+                t0 = time.perf_counter()
+                _, ids = self.backend_set.search_class(ci, q, mask, k)
+                dt = time.perf_counter() - t0 + t_mask
+                recalls[ci] = recall_at_k(ids, ti)
+                route_utils[ci] = recalls[ci] / max(dt, 1e-7)
+            # Constrained pick (Faiss-autotune style): utility only decides
+            # among classes meeting the recall target.  A raw utility argmax
+            # lets wall-clock noise during fit route queries to a fast
+            # low-recall tier, collapsing served recall run-to-run.
+            ok = recalls >= self.config.route_recall_target
+            if ok.any():
+                route = int(np.argmax(np.where(ok, route_utils, -1.0)))
+            else:
+                route = int(np.argmax(recalls + 1e-9 * route_utils))
+            u_post = max(u_post, float(route_utils[route]))
         label = PRE_FILTER if u_pre >= u_post else POST_FILTER
-        return label, true_sel, u_pre, u_post
+        return QueryLabel(label, true_sel, u_pre, u_post, route, route_utils)
 
     def fit(
         self,
@@ -374,15 +499,15 @@ class FilteredANNEngine:
         """Paper §3.1: execute both strategies per training query, label by
         utility U = recall@k / T_search, train estimator GBM + planner MLP."""
         t0 = time.perf_counter()
-        feats, labels, true_sels = [], [], []
+        labels, true_sels, route_labels = [], [], []
         for q, pred in zip(train_queries, train_preds):
-            label, true_sel, u_pre, u_post = self.label_query(q, pred, k)
-            est0, ex0 = self.estimator.estimate_ex(pred)  # pre-GBM estimate
-            feats.append(self.feat.vector(pred, est0, k, ex0))
-            labels.append(label)
-            true_sels.append(true_sel)
+            lab = self.label_query(q, pred, k)
+            labels.append(lab.label)
+            true_sels.append(lab.true_sel)
+            route_labels.append(lab.route)
             if verbose:
-                print(f"  {pred}: sel={true_sel:.4f} U_pre={u_pre:.1f} U_post={u_post:.1f}")
+                print(f"  {pred}: sel={lab.true_sel:.4f} "
+                      f"U_pre={lab.u_pre:.1f} U_post={lab.u_post:.1f}")
         # selectivity estimator GBM trains on the same queries (paper §3.1)
         self.estimator.fit(list(train_preds), true_sels)
         # re-extract features with the trained estimator so train/test match
@@ -391,6 +516,12 @@ class FilteredANNEngine:
             est, ex = self.estimator.estimate_ex(p)
             feats.append(self.feat.vector(p, est, k, ex))
         self.planner.fit(np.stack(feats), np.asarray(labels))
+        if self.backend_set is not None:
+            # routing head on the same features: argmax-utility class labels
+            self.planner.fit_routing(
+                np.stack(feats), np.asarray(route_labels),
+                self.backend_set.class_names(),
+            )
         # warm the single-query predict shape: the first live query must not
         # pay the (1, F) jit compile (~150 ms) inside its latency budget
         self.planner.decide(feats[0])
@@ -439,15 +570,52 @@ class FilteredANNEngine:
         Repeat predicates hit the plan cache and skip both the estimator
         and the MLP dispatch (same values by purity, just cheaper).
         """
+        est, decision, _route, overhead = self.plan_ex(pred, k)
+        return est, decision, overhead
+
+    def plan_ex(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, int, float]:
+        """:meth:`plan` plus the routing class: returns
+        ``(est_selectivity, decision, route, plan_overhead_s)`` where
+        ``route`` is the (backend, knob-tier) class index for post-filter
+        rows when the routing head is active, else ``NO_ROUTE``."""
         t0 = time.perf_counter()
         self.plan_cache.validate_epoch(self._plan_epoch())
         key = (self._plan_key(pred), int(k))
         hit = self.plan_cache.get(key)
         if hit is not None:
-            return hit[0], hit[1], time.perf_counter() - t0
-        est, decision = self._plan_cold(pred, k)
-        self.plan_cache.put(key, (est, decision))
-        return est, decision, time.perf_counter() - t0
+            return hit[0], hit[1], hit[2], time.perf_counter() - t0
+        est, decision, route = self._plan_cold(pred, k)
+        self.plan_cache.put(key, (est, decision, route))
+        return est, decision, route, time.perf_counter() - t0
+
+    def _class_names(self) -> Optional[Tuple[str, ...]]:
+        """This engine's (backend, knob-tier) class enumeration.  Derived
+        from the built BackendSet when present, else from the configured
+        backend roster (knob grids are static per backend class, so a
+        planning-only ``build_stats`` engine — the sharded deployment's
+        planner — enumerates the same classes its shards build)."""
+        bs = getattr(self, "backend_set", None)
+        if bs is not None:
+            return bs.class_names()
+        if self.config.backends:
+            from ..index.registry import _REGISTRY
+            return tuple(
+                f"{nm}:{tier.name}"
+                for nm in self.config.backends
+                for tier in _REGISTRY[nm](seed=0).knob_grid()
+            )
+        return None
+
+    def _routing_active(self) -> bool:
+        """Routing applies only when the planner's routing head was fitted
+        over EXACTLY this engine's (backend, knob-tier) class enumeration —
+        a head trained under a different backend roster (e.g. restored from
+        a checkpoint of another deployment) is ignored, not misapplied."""
+        expected = self._class_names()
+        if expected is None:
+            return False
+        rc = self.planner.route_classes
+        return rc is not None and rc == expected
 
     def _plan_epoch(self) -> Tuple[int, int, int]:
         """What a cached plan is valid under: the installed head
@@ -458,7 +626,7 @@ class FilteredANNEngine:
         return (self.planner_version, self.planner.generation,
                 self.estimator.generation)
 
-    def _plan_cold(self, pred: AnyPredicate, k: int) -> Tuple[float, int]:
+    def _plan_cold(self, pred: AnyPredicate, k: int) -> Tuple[float, int, int]:
         est, exact = self.estimator.estimate_ex(pred)
         fv = self.feat.vector(pred, est, k, exact)
         if self.planner.params:
@@ -470,7 +638,12 @@ class FilteredANNEngine:
             decision = PRE_FILTER if est < 0.05 else POST_FILTER
             if decision == PRE_FILTER and exact:
                 decision = INDEXED_PRE
-        return est, decision
+        route = NO_ROUTE
+        if decision == POST_FILTER and self._routing_active():
+            r = self.planner.route(fv)
+            if r is not None:
+                route = int(r[0])
+        return est, decision, route
 
     def plan_batch(
         self, preds: Sequence[AnyPredicate], k: int = 10
@@ -483,11 +656,20 @@ class FilteredANNEngine:
         k) was planned before resolve from the plan cache; only the misses
         pay the estimator pass and the MLP dispatch.
         """
+        ests, decisions, _routes, overhead = self.plan_batch_ex(preds, k)
+        return ests, decisions, overhead
+
+    def plan_batch_ex(
+        self, preds: Sequence[AnyPredicate], k: int = 10
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, float]:
+        """Batched :meth:`plan_ex`: additionally returns per-row routing
+        classes (``NO_ROUTE`` for non-post rows or when routing is off)."""
         t0 = time.perf_counter()
         self.plan_cache.validate_epoch(self._plan_epoch())
         b = len(preds)
         ests = np.zeros(b, np.float64)
         decisions = np.zeros(b, np.int32)
+        routes = np.full(b, NO_ROUTE, np.int32)
         keys = [(self._plan_key(p), int(k)) for p in preds]
         miss = []
         for i, key in enumerate(keys):
@@ -495,7 +677,7 @@ class FilteredANNEngine:
             if hit is None:
                 miss.append(i)
             else:
-                ests[i], decisions[i] = hit
+                ests[i], decisions[i], routes[i] = hit
         if miss:
             sub = [preds[i] for i in miss]
             m_ests, m_exact = self.estimator.estimate_batch_ex(sub)
@@ -507,10 +689,19 @@ class FilteredANNEngine:
                 m_dec = np.where(
                     (m_dec == PRE_FILTER) & m_exact, INDEXED_PRE, m_dec
                 ).astype(np.int32)
+            m_routes = np.full(len(miss), NO_ROUTE, np.int32)
+            if self._routing_active():
+                r = self.planner.route(fm)
+                if r is not None:
+                    m_routes = np.where(m_dec == POST_FILTER, r, NO_ROUTE).astype(np.int32)
             for j, i in enumerate(miss):
-                ests[i], decisions[i] = float(m_ests[j]), int(m_dec[j])
-                self.plan_cache.put(keys[i], (float(m_ests[j]), int(m_dec[j])))
-        return ests, decisions, time.perf_counter() - t0
+                ests[i], decisions[i], routes[i] = (
+                    float(m_ests[j]), int(m_dec[j]), int(m_routes[j])
+                )
+                self.plan_cache.put(
+                    keys[i], (float(m_ests[j]), int(m_dec[j]), int(m_routes[j]))
+                )
+        return ests, decisions, routes, time.perf_counter() - t0
 
     def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:
         """Partition the corpus into ``n_shards`` contiguous shards, each with
@@ -545,6 +736,13 @@ class FilteredANNEngine:
                     AttributeIndex.build(c, m, self.config.range_buckets),
                     PredicateCache(self.config.pred_cache_size),
                 )
+            # per-shard backend instances: backends index shard-local row
+            # positions, so (like the attribute index) each shard builds its
+            # own from its slice of the corpus
+            bset = None
+            if self.config.backends:
+                bset = BackendSet.build(v, self.config.backends,
+                                        seed=self.config.seed + s)
             shards.append(CorpusShard(
                 shard_id=s,
                 ids=ids,
@@ -554,6 +752,7 @@ class FilteredANNEngine:
                     alpha0=self.config.alpha0, nprobe0=self.config.nprobe0,
                 ),
                 ipre_exec=ipre,
+                backend_set=bset,
             ))
         return shards
 
@@ -561,16 +760,41 @@ class FilteredANNEngine:
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         """Plan + execute one filtered ANN query."""
         q = np.atleast_2d(q)
-        est, decision, plan_overhead = self.plan(pred, k)
+        est, decision, route, plan_overhead = self.plan_ex(pred, k)
         if decision == INDEXED_PRE:
             res = self.ipre_exec.search(q, pred, k)
         elif decision == PRE_FILTER:
             res = self.pre_exec.search(q, pred, k)
+        elif route >= 0 and self.backend_set is not None:
+            # routed: mask once (bitmap-indexed when covered), then the
+            # chosen backend's masked search at the chosen knob tier
+            t0 = time.perf_counter()
+            mask = self.ipre_exec.candidate_mask(pred)
+            d, ids = self.backend_set.search_class(route, q, mask, k)
+            res = SearchResult(d, ids, time.perf_counter() - t0, "post")
         else:
             # the estimate also *parameterises* the chosen executor
             res = self.post_exec.search(q, pred, k, est_selectivity=est)
+        if not res.backend:
+            if decision == POST_FILTER and route >= 0 and self.backend_set is not None:
+                res.backend, res.knob = self.backend_set.classes()[route]
+            else:
+                res.backend, res.knob = _default_route_name(decision)
         res.elapsed += plan_overhead   # end-to-end includes planning (paper §4.1)
         return PlannedResult(res, est, decision, plan_overhead)
+
+    def _route_names(
+        self, decisions: np.ndarray, routes: np.ndarray
+    ) -> Optional[List[Optional[Tuple[str, str]]]]:
+        """Per-row (backend, knob) labels for routed rows, None elsewhere."""
+        if getattr(self, "backend_set", None) is None:
+            return None
+        classes = self.backend_set.classes()
+        return [
+            classes[int(routes[j])]
+            if decisions[j] == POST_FILTER and routes[j] >= 0 else None
+            for j in range(len(routes))
+        ]
 
     def batch_query(
         self, queries: np.ndarray, preds: Sequence[AnyPredicate], k: int = 10
@@ -590,15 +814,17 @@ class FilteredANNEngine:
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         b = len(preds)
-        ests, decisions, plan_overhead = self.plan_batch(preds, k)
+        ests, decisions, routes, plan_overhead = self.plan_batch_ex(preds, k)
         plan_share = plan_overhead / max(b, 1)
         t0 = time.perf_counter()
         d, ids, rounds = _execute_grouped(
             self.pre_exec, self.ipre_exec, self.post_exec,
             queries, preds, k, decisions, ests,
+            routes=routes, backend_set=self.backend_set,
         )
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
-        return package_results(d, ids, rounds, ests, decisions, share, plan_share)
+        return package_results(d, ids, rounds, ests, decisions, share, plan_share,
+                               route_names=self._route_names(decisions, routes))
 
     # ------------------------------------------------------------------
     def ground_truth(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> np.ndarray:

@@ -11,7 +11,11 @@
 * :class:`PostFilterExec`       — search the global IVF index for α·k
   candidates, filter, and double α (and widen nprobe) until ≥ k valid
   results survive.
-* :class:`AcornExec`            — ACORN-1: filter *during* graph traversal.
+
+ACORN (and any other registered ANN backend) is reached through the backend
+registry (``repro.index.registry``) rather than a bespoke executor: routed
+rows compute the candidate mask once and call the backend's uniform
+``search_masked`` surface.
 
 All return ``SearchResult`` with global ids (-1 padded), squared-L2
 distances, wall time, and strategy bookkeeping used to label planner
@@ -25,8 +29,6 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..index.acorn import AcornIndex
-from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
 from ..kernels.ops import fused_masked_topk
 from .predicates import AnyPredicate
@@ -37,7 +39,6 @@ __all__ = [
     "PreFilterExec",
     "IndexedPreFilterExec",
     "PostFilterExec",
-    "AcornExec",
     "recall_at_k",
 ]
 
@@ -49,6 +50,8 @@ class SearchResult:
     elapsed: float         # end-to-end seconds (filter + search + expansion)
     strategy: str
     n_expansions: int = 0  # post-filter α-doubling rounds
+    backend: str = ""      # routed backend name ("" until packaging fills it)
+    knob: str = ""         # routed knob-tier name
 
 
 def recall_at_k(result_ids: np.ndarray, truth_ids: np.ndarray) -> float:
@@ -308,18 +311,3 @@ class PostFilterExec:
                 nprobe[pending] = np.minimum(nprobe[pending] * 2, n_lists)
                 rounds[pending] += 1
         return out_d, out_i, rounds
-
-
-class AcornExec:
-    """ACORN-1 baseline: predicate-aware graph traversal."""
-
-    def __init__(self, index: AcornIndex, cat: np.ndarray, num: np.ndarray, ef: int = 64):
-        self.index = index
-        self.cat, self.num = cat, num
-        self.ef = ef
-
-    def search(self, queries: np.ndarray, pred: AnyPredicate, k: int) -> SearchResult:
-        t0 = time.perf_counter()
-        mask = pred.eval(self.cat, self.num)
-        d, ids = self.index.search(np.asarray(queries, np.float32), k, ef=self.ef, mask=mask)
-        return SearchResult(d, ids, time.perf_counter() - t0, "acorn")

@@ -18,6 +18,18 @@ identical.  The pre-vs-post boundary the head learned is untouched.
 Pure JAX (no flax/optax available offline): params are a pytree dict, the
 update step is jit-compiled, inference is one fused matmul chain — the
 "minimal inference overhead" property the paper claims.
+
+**Routing head** (the (plan, backend, knob) extension): rows the plan head
+sends to post-filtering may additionally be routed to one of the engine's
+registered (backend, knob-tier) classes.  The router is a deterministic
+multinomial softmax regression trained by :meth:`CorePlanner.fit_routing` on
+§3.1 utility-race argmax labels — kept OUTSIDE the jitted MLP pytree so (a)
+legacy 2-way behaviour is bit-unchanged when no routing head is fitted, and
+(b) planner checkpoints written before the routing head load and serve
+plan-only (``state_dict``/``load_state`` treat the ``route`` subtree as
+optional).  Routing class names travel through checkpoints as a fixed-width
+uint8 byte matrix because the checkpointer converts every leaf with
+``jnp.asarray`` (unicode arrays would fail there).
 """
 from __future__ import annotations
 
@@ -48,6 +60,28 @@ _EPOCHS = 500
 _BATCH = 200
 _LR = 1e-3
 _PATIENCE = 15
+
+# routing head: full-batch GD softmax regression, fixed iteration count —
+# deterministic by construction (no jit, float64 accumulation)
+_ROUTE_ITERS = 400
+_ROUTE_LR = 0.5
+_ROUTE_L2 = 1e-3
+
+
+def _encode_names(names: Sequence[str]) -> np.ndarray:
+    """Class names -> fixed-width uint8 matrix (checkpoint-safe: survives
+    ``jnp.asarray`` where unicode dtypes would not)."""
+    bs = [n.encode("utf-8") for n in names]
+    width = max(len(b) for b in bs) if bs else 1
+    out = np.zeros((len(bs), width), np.uint8)
+    for i, b in enumerate(bs):
+        out[i, : len(b)] = np.frombuffer(b, np.uint8)
+    return out
+
+
+def _decode_names(arr: np.ndarray) -> Tuple[str, ...]:
+    a = np.asarray(arr, np.uint8)
+    return tuple(bytes(row).rstrip(b"\x00").decode("utf-8") for row in a)
 
 
 def roc_auc(y_true: np.ndarray, scores: np.ndarray) -> float:
@@ -201,6 +235,9 @@ class CorePlanner:
         # so anything memoising decisions (the engine's PlanCache) keys its
         # validity on this generation (mirrors SelectivityEstimator.generation)
         self.generation = 0
+        # routing head (fit_routing): None until trained — plan-only serving
+        self._route: Optional[Dict[str, np.ndarray]] = None
+        self._route_classes: Optional[Tuple[str, ...]] = None
         self._predict_jit = jax.jit(lambda p, x: jax.nn.softmax(_logits(p, x))[:, 1])
 
     # ------------------------------------------------------------------
@@ -322,3 +359,116 @@ class CorePlanner:
             x[:, PlannerFeatures.SEL_EXACT_COL] >= 0.5
         )
         return np.where(promote, INDEXED_PRE, base).astype(np.int32)
+
+    # ------------------------------------------------------------------
+    # routing head: (backend, knob-tier) class on top of the plan decision
+    # ------------------------------------------------------------------
+    @property
+    def route_classes(self) -> Optional[Tuple[str, ...]]:
+        """The (backend:tier) class names the routing head was fitted over,
+        or None when no routing head exists.  The engine only applies
+        routing when these match its own BackendSet's class enumeration."""
+        return self._route_classes
+
+    def fit_routing(
+        self,
+        features: np.ndarray,
+        route_labels: np.ndarray,
+        class_names: Sequence[str],
+        iters: int = _ROUTE_ITERS,
+        lr: float = _ROUTE_LR,
+        l2: float = _ROUTE_L2,
+    ) -> "CorePlanner":
+        """Fit the routing head on §3.1 utility-race argmax labels.
+
+        ``route_labels`` are class indices into ``class_names``; rows with a
+        negative label (no race ran) are ignored.  Unlike the plan head this
+        uses ALL features including sel_is_exact — exactness of the
+        selectivity estimate is informative for backend choice.  Plain
+        full-batch float64 gradient descent with a fixed iteration count:
+        bit-deterministic for a given (features, labels, class_names).
+        """
+        x = np.atleast_2d(np.asarray(features, np.float64))
+        y = np.asarray(route_labels, np.int64).reshape(-1)
+        keep = y >= 0
+        x, y = x[keep], y[keep]
+        n_classes = len(class_names)
+        if x.shape[0] == 0 or n_classes == 0:
+            return self
+        mu = x.mean(0)
+        sigma = x.std(0) + 1e-6
+        xn = (x - mu) / sigma
+        n, f = xn.shape
+        w = np.zeros((f, n_classes), np.float64)
+        b = np.zeros(n_classes, np.float64)
+        onehot = np.zeros((n, n_classes), np.float64)
+        onehot[np.arange(n), y] = 1.0
+        for _ in range(iters):
+            logits = xn @ w + b
+            logits -= logits.max(axis=1, keepdims=True)
+            p = np.exp(logits)
+            p /= p.sum(axis=1, keepdims=True)
+            g = (p - onehot) / n
+            w -= lr * (xn.T @ g + l2 * w)
+            b -= lr * g.sum(0)
+        self._route = {
+            "w": w.astype(np.float32),
+            "b": b.astype(np.float32),
+            "mu": mu.astype(np.float32),
+            "sigma": sigma.astype(np.float32),
+        }
+        self._route_classes = tuple(class_names)
+        self.generation += 1          # cached (plan, route) decisions are stale
+        return self
+
+    def route(self, features: np.ndarray) -> Optional[np.ndarray]:
+        """Routing class index per row, or None when no head is fitted.
+        Deterministic argmax (first index wins ties)."""
+        if self._route is None:
+            return None
+        x = np.atleast_2d(np.asarray(features, np.float32)).astype(np.float64)
+        r = self._route
+        xn = (x - r["mu"].astype(np.float64)) / r["sigma"].astype(np.float64)
+        logits = xn @ r["w"].astype(np.float64) + r["b"].astype(np.float64)
+        return np.argmax(logits, axis=1).astype(np.int32)
+
+    # ------------------------------------------------------------------
+    # checkpoint state (numeric-leaf pytree, Checkpointer-compatible)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict:
+        """Numeric-only pytree of the trained planner.  The ``route``
+        subtree exists only when a routing head was fitted, so checkpoints
+        written before the routing head existed stay loadable."""
+        assert self.params is not None, "planner not trained"
+        state: Dict = {
+            "params": {k: np.asarray(v) for k, v in self.params.items()},
+            "mu": np.asarray(self.mu),
+            "sigma": np.asarray(self.sigma),
+            "meta": np.asarray([self.n_features, self.seed], np.int32),
+        }
+        if self._route is not None:
+            state["route"] = {
+                **{k: np.asarray(v) for k, v in self._route.items()},
+                "classes": _encode_names(self._route_classes or ()),
+            }
+        return state
+
+    def load_state(self, state: Dict) -> "CorePlanner":
+        """Inverse of :meth:`state_dict`; accepts jax or numpy leaves (the
+        Checkpointer restores jax arrays).  A state without a ``route``
+        subtree loads as a plan-only planner (default-backend serving)."""
+        self.params = {k: jnp.asarray(v) for k, v in state["params"].items()}
+        self.mu = np.asarray(state["mu"], np.float32)
+        self.sigma = np.asarray(state["sigma"], np.float32)
+        route = state.get("route")
+        if route is not None:
+            self._route = {
+                k: np.asarray(route[k], np.float32)
+                for k in ("w", "b", "mu", "sigma")
+            }
+            self._route_classes = _decode_names(np.asarray(route["classes"]))
+        else:
+            self._route = None
+            self._route_classes = None
+        self.generation += 1
+        return self

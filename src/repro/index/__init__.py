@@ -1,13 +1,33 @@
 from .flat import FlatIndex, l2_topk, chunked_masked_topk
 from .ivf import IVFIndex
 from .acorn import AcornIndex
+from .pq import IVFPQIndex
 from .kmeans import kmeans
+from .registry import (
+    DEFAULT_BACKENDS,
+    BackendSet,
+    KnobTier,
+    SearchBackend,
+    backend_names,
+    make_backend,
+    register_backend,
+    unregister_backend,
+)
 
 __all__ = [
     "FlatIndex",
     "IVFIndex",
     "AcornIndex",
+    "IVFPQIndex",
     "kmeans",
     "l2_topk",
     "chunked_masked_topk",
+    "BackendSet",
+    "KnobTier",
+    "SearchBackend",
+    "DEFAULT_BACKENDS",
+    "backend_names",
+    "make_backend",
+    "register_backend",
+    "unregister_backend",
 ]

@@ -1,0 +1,265 @@
+"""IVF-PQ index: coarse IVF lists + product-quantized codes + int8 ADC scan.
+
+The memory story (the gateway to large corpora on fixed RAM): the scan
+touches only
+
+* the coarse centroids (L, d),
+* per-subspace codebooks (M, n_codes, d/M),
+* uint8 codes (N, M) in IVF-sorted order, and
+* the id/offset layout —
+
+so resident bytes per vector are ~M + 4 instead of 4·d.  The original
+float32 vectors are kept ONLY for the optional exact re-rank of the top-R
+ADC candidates and are charged separately (``rerank_bytes``): in a real
+deployment that store lives on a slower tier (disk/host RAM) while the
+structures ``memory_bytes()`` counts stay scan-resident.
+
+Distance evaluation is asymmetric (ADC): per query, a (M, n_codes) table of
+exact query-to-codeword squared distances is built once, quantized to uint8
+(per-subspace base + one global scale — the FAISS-style fast-scan layout),
+and candidate distances are integer lookup-table sums over the codes.  The
+uint8 floor quantization only ever *under*-estimates: for any candidate
+
+    0 <= decoded_distance - adc_distance() < M * scale
+
+(the bound the Hypothesis property suite checks).  Exact re-rank then
+rescores the top-R ADC survivors against the original vectors, so returned
+distances are exact and the ADC approximation only decides *which* R
+candidates get rescored.
+
+Search is strictly per-row (one LUT per query, no cross-row arithmetic), so
+results are bit-identical in any batch composition — the PR 2 discipline the
+cross-backend conformance harness enforces — with the IVF-style composite
+``(distance bits << 32) | candidate position`` sort keys making tie handling
+deterministic too.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .kmeans import assign, kmeans
+
+__all__ = ["IVFPQIndex"]
+
+
+def _composite_topk(dist_key: np.ndarray, kk: int) -> np.ndarray:
+    """Indices of the kk smallest int64 composite keys, ascending."""
+    if dist_key.size <= kk:
+        return np.argsort(dist_key, kind="stable")
+    sel = np.argpartition(dist_key, kk - 1)[:kk]
+    return sel[np.argsort(dist_key[sel], kind="stable")]
+
+
+class IVFPQIndex:
+    """Coarse IVF quantizer + per-subspace k-means codebooks + ADC scan."""
+
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        n_lists: Optional[int] = None,
+        m: Optional[int] = None,
+        n_codes: int = 256,
+        seed: int = 0,
+        train_sample: int = 16384,
+    ):
+        self.vectors_np = np.ascontiguousarray(vectors, np.float32)
+        self.n, self.dim = self.vectors_np.shape
+        n = max(self.n, 1)
+        self.n_lists = min(n_lists or max(8, int(np.sqrt(n))), n)
+        # M subspaces: d/8 dims each by default (clamped so codes stay uint8
+        # and every subspace is non-empty)
+        self.m = min(m or max(1, self.dim // 8), max(self.dim, 1))
+        self.dsub = int(np.ceil(self.dim / self.m)) if self.dim else 1
+        self.n_codes = int(min(n_codes, 256, n))
+        self.seed = seed
+        self.train_sample = train_sample
+        self.built = False
+
+    # ------------------------------------------------------------------
+    def _pad(self, x: np.ndarray) -> np.ndarray:
+        """Zero-pad the feature axis to m * dsub (zeros contribute nothing
+        to L2, so padded-space distances equal true distances)."""
+        want = self.m * self.dsub
+        if x.shape[1] == want:
+            return x
+        out = np.zeros((x.shape[0], want), np.float32)
+        out[:, : x.shape[1]] = x
+        return out
+
+    def build(self, iters: int = 6) -> "IVFPQIndex":
+        if self.n == 0:
+            self.sorted_ids = np.empty(0, np.int32)
+            self.codes = np.empty((0, self.m), np.uint8)
+            self.centroids = np.zeros((0, self.dim), np.float32)
+            self.codebooks = np.zeros((self.m, 1, self.dsub), np.float32)
+            self.offsets = np.zeros(1, np.int64)
+            self.radius_sq = np.zeros(self.m, np.float32)
+            self.built = True
+            return self
+        # coarse quantizer: same sorted-list layout as IVFIndex
+        c, a = kmeans(self.vectors_np, self.n_lists, iters=iters, seed=self.seed)
+        self.centroids = c
+        order = np.argsort(a, kind="stable")
+        self.sorted_ids = order.astype(np.int32)
+        counts = np.bincount(a, minlength=self.n_lists)
+        self.offsets = np.zeros(self.n_lists + 1, np.int64)
+        np.cumsum(counts, out=self.offsets[1:])
+        # per-subspace codebooks trained on a fixed sample
+        xp = self._pad(self.vectors_np)
+        rng = np.random.default_rng(self.seed + 17)
+        sample = (
+            rng.choice(self.n, size=min(self.train_sample, self.n), replace=False)
+            if self.n > self.train_sample else np.arange(self.n)
+        )
+        cbs = np.zeros((self.m, self.n_codes, self.dsub), np.float32)
+        codes = np.zeros((self.n, self.m), np.uint8)
+        self.radius_sq = np.zeros(self.m, np.float32)
+        for j in range(self.m):
+            sub = xp[:, j * self.dsub : (j + 1) * self.dsub]
+            cb, _ = kmeans(sub[sample], self.n_codes, iters=iters, seed=self.seed + 1 + j)
+            cbs[j] = cb
+            code_j = np.asarray(assign(sub, cb))
+            codes[:, j] = code_j.astype(np.uint8)
+            # per-subspace quantization radius over the WHOLE corpus (the
+            # encode/decode round-trip error bound the property suite checks)
+            err = ((sub - cb[code_j]) ** 2).sum(1)
+            self.radius_sq[j] = float(err.max()) if err.size else 0.0
+        self.codebooks = cbs
+        self.codes = codes[order]          # IVF-sorted, like sorted_vecs
+        self.built = True
+        return self
+
+    # ------------------------------------------------------------------
+    # encode / decode (property-test surface)
+    # ------------------------------------------------------------------
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        """(B, d) -> (B, M) uint8 nearest-codeword assignment."""
+        assert self.built
+        xp = self._pad(np.atleast_2d(np.asarray(x, np.float32)))
+        out = np.zeros((xp.shape[0], self.m), np.uint8)
+        for j in range(self.m):
+            sub = xp[:, j * self.dsub : (j + 1) * self.dsub]
+            d2 = ((sub[:, None, :] - self.codebooks[j][None]) ** 2).sum(-1)
+            out[:, j] = np.argmin(d2, axis=1).astype(np.uint8)
+        return out
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """(B, M) uint8 -> (B, d) reconstructed vectors."""
+        assert self.built
+        codes = np.atleast_2d(codes)
+        parts = [self.codebooks[j][codes[:, j]] for j in range(self.m)]
+        return np.concatenate(parts, axis=1)[:, : self.dim].astype(np.float32)
+
+    # ------------------------------------------------------------------
+    # ADC machinery
+    # ------------------------------------------------------------------
+    def _lut(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Exact (M, n_codes) query-to-codeword table + its uint8 form.
+
+        Returns ``(lut8, base (M,), scale)`` with the floor-quantization
+        invariant ``lut8*scale + base in (lut_f - scale, lut_f]``."""
+        qs = self._pad(q[None])[0].reshape(self.m, self.dsub)
+        lut_f = ((self.codebooks - qs[:, None, :]) ** 2).sum(-1)   # (M, n_codes)
+        base = lut_f.min(axis=1)
+        span = float((lut_f - base[:, None]).max())
+        scale = max(span / 255.0, 1e-12)
+        lut8 = np.minimum(
+            np.floor((lut_f - base[:, None]) / scale), 255.0
+        ).astype(np.uint8)
+        return lut8, base, scale
+
+    def adc_distances(self, q: np.ndarray, ids: np.ndarray) -> Tuple[np.ndarray, float]:
+        """int8-LUT ADC distances for global ``ids`` plus the quantization
+        error bound: ``0 <= decoded_exact - adc < bound`` per candidate."""
+        assert self.built
+        q = np.asarray(q, np.float32).reshape(-1)
+        lut8, base, scale = self._lut(q)
+        pos = np.argsort(self.sorted_ids, kind="stable")[np.asarray(ids, np.int64)]
+        codes = self.codes[pos]                                    # (B, M)
+        acc = lut8[np.arange(self.m)[None, :], codes].sum(1, dtype=np.int64)
+        adc = acc.astype(np.float64) * scale + float(base.sum())
+        return adc.astype(np.float32), self.m * scale
+
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        nprobe: int = 8,
+        rerank: int = 64,
+        mask: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Masked ADC top-k with optional exact re-rank of the top-R.
+
+        ``rerank=0`` returns raw ADC distances; ``rerank=R > 0`` rescores the
+        R best ADC candidates against the original vectors (distances exact).
+        Strictly per-row, so any batch composition returns identical rows.
+        """
+        assert self.built
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        b = q.shape[0]
+        out_d = np.full((b, k), np.inf, np.float32)
+        out_i = np.full((b, k), -1, np.int32)
+        if self.n == 0:
+            return out_d, out_i
+        nprobe = min(nprobe, self.n_lists)
+        for r in range(b):
+            d, ids = self._search_one(q[r], k, nprobe, rerank, mask)
+            out_d[r, : d.size], out_i[r, : ids.size] = d, ids
+        return out_d, out_i
+
+    def _search_one(self, q, k, nprobe, rerank, mask):
+        # probe selection: nearest coarse lists, ties broken by list id
+        qc = ((self.centroids - q[None]) ** 2).sum(1).astype(np.float32)
+        key_c = (np.maximum(qc, 0.0).view(np.int32).astype(np.int64) << 32) | np.arange(
+            self.n_lists, dtype=np.int64
+        )
+        probes = _composite_topk(key_c, nprobe)
+        pos = np.concatenate(
+            [np.arange(self.offsets[l], self.offsets[l + 1]) for l in probes]
+        ) if probes.size else np.empty(0, np.int64)
+        if pos.size == 0:
+            return np.empty(0, np.float32), np.empty(0, np.int32)
+        cand_ids = self.sorted_ids[pos]
+        if mask is not None:
+            keep = mask[cand_ids]
+            pos, cand_ids = pos[keep], cand_ids[keep]
+        if pos.size == 0:
+            return np.empty(0, np.float32), np.empty(0, np.int32)
+        # int8 ADC scan over the surviving candidates
+        lut8, base, scale = self._lut(q)
+        acc = lut8[np.arange(self.m)[None, :], self.codes[pos]].sum(1, dtype=np.int64)
+        take = min(max(rerank, k) if rerank > 0 else k, pos.size)
+        adc_key = (acc << 32) | np.arange(pos.size, dtype=np.int64)
+        sel = _composite_topk(adc_key, take)
+        sel_ids = cand_ids[sel]
+        if rerank > 0:
+            # exact re-rank against the original vectors; composite keys keep
+            # equal-distance ordering independent of the candidate set size
+            ex = ((self.vectors_np[sel_ids] - q[None]) ** 2).sum(1).astype(np.float32)
+            ex = np.maximum(ex, 0.0)
+            key = (ex.view(np.int32).astype(np.int64) << 32) | np.arange(
+                ex.size, dtype=np.int64
+            )
+            order = _composite_topk(key, min(k, ex.size))
+            return ex[order], sel_ids[order].astype(np.int32)
+        adc = (acc[sel].astype(np.float64) * scale + float(base.sum())).astype(np.float32)
+        kk = min(k, adc.size)
+        return adc[:kk], sel_ids[:kk].astype(np.int32)
+
+    # ------------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        """Scan-resident bytes: codes + codebooks + coarse centroids + id
+        layout.  The exact-re-rank vector store is ``rerank_bytes`` (slower
+        tier in a real deployment; reported separately by the bench)."""
+        assert self.built
+        return int(
+            self.codes.nbytes + self.codebooks.nbytes + self.centroids.nbytes
+            + self.sorted_ids.nbytes + self.offsets.nbytes
+        )
+
+    @property
+    def rerank_bytes(self) -> int:
+        return int(self.vectors_np.nbytes)

@@ -29,7 +29,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from ..core.engine import FilteredANNEngine, PlannedResult
+from ..core.engine import FilteredANNEngine, PlannedResult, NO_ROUTE
 from ..core.planner import CorePlanner, roc_auc
 from .queue import RuntimeRequest
 
@@ -56,6 +56,7 @@ class LogEntry:
     decision: int               # what the serving planner chose
     label: int                  # ground-truth winner (PRE_FILTER/POST_FILTER)
     latency: float              # latency the SERVED strategy actually paid (s)
+    route: int = NO_ROUTE       # best (backend, knob) class when routing is on
 
 
 class OnlineFeedback:
@@ -86,12 +87,14 @@ class OnlineFeedback:
         self._since_refit = 0
 
     # ------------------------------------------------------------------
-    def _shadow_label(self, req: RuntimeRequest) -> int:
+    def _shadow_label(self, req: RuntimeRequest):
         """Paper §3.1 labelling, online — delegates to the engine's shared
         :meth:`FilteredANNEngine.label_query` (the SAME rule the offline
-        ``fit`` loop uses, so online and offline labels cannot drift)."""
-        label, _, _, _ = self.engine.label_query(req.query, req.pred, req.k)
-        return label
+        ``fit`` loop uses, so online and offline labels cannot drift).
+        Returns ``(label, route)``; when the engine carries a backend
+        roster the route is the winning (backend, knob) class index."""
+        ql = self.engine.label_query(req.query, req.pred, req.k)
+        return ql.label, ql.route
 
     def observe(self, req: RuntimeRequest, res: PlannedResult) -> bool:
         """Called per served request; returns True when it was sampled into
@@ -100,13 +103,19 @@ class OnlineFeedback:
         self.n_observed += 1
         if self.rng.random() >= self.config.sample_rate:
             return False
-        label = self.labeler(req)
+        labelled = self.labeler(req)
+        # pluggable labelers may return a bare int (plan label only) or a
+        # (label, route) pair; the default shadow labeller returns the pair
+        if isinstance(labelled, tuple):
+            label, route = labelled
+        else:
+            label, route = labelled, NO_ROUTE
         est, exact = self.engine.estimator.estimate_ex(req.pred)
         fv = self.engine.feat.vector(req.pred, est, req.k, exact)
         # the logged latency is what the SERVED strategy paid (its share of
         # the executed batch), not the shadow race's winner time
         self.log.append(LogEntry(fv, res.decision, int(label),
-                                 float(res.result.elapsed)))
+                                 float(res.result.elapsed), route=int(route)))
         if len(self.log) > self.config.max_log:
             self.log = self.log[-self.config.max_log:]
         self.n_sampled += 1
@@ -140,6 +149,16 @@ class OnlineFeedback:
         candidate = CorePlanner(
             n_features=x.shape[1], seed=cfg.seed + self.n_refits
         ).fit(x[train], y[train])
+        # routing head rides along: when the engine carries a backend roster
+        # and the log holds routed labels, the candidate learns the
+        # (backend, knob) head from the SAME train slice (guarded by the
+        # same plan-AUC swap decision — routing never swaps independently)
+        backend_set = getattr(self.engine, "backend_set", None)
+        if backend_set is not None:
+            routes = np.asarray([e.route for e in self.log], np.int32)
+            if (routes[train] >= 0).sum() >= 2:
+                candidate.fit_routing(x[train], routes[train],
+                                      backend_set.class_names())
         cand_auc = roc_auc(y[hold], candidate.predict_proba(x[hold]))
         current = self.engine.planner
         if current.params is not None:

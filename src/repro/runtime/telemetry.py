@@ -46,6 +46,9 @@ class Telemetry:
         self.n_completed = 0
         self.n_batches = 0
         self.plan_counts: Dict[str, int] = {n: 0 for n in STRATEGY_NAMES.values()}
+        # backend-mix: routed (backend:knob) execution counts — strategy
+        # name stands in for rows executed before routing existed
+        self.backend_counts: Dict[str, int] = {}
         self.batch_sizes: Dict[int, int] = {}
         self.deadline_met: Dict[str, int] = {}
         self.deadline_missed: Dict[str, int] = {}
@@ -69,6 +72,10 @@ class Telemetry:
         for req, res in zip(reqs, results):
             self.n_completed += 1
             self.plan_counts[STRATEGY_NAMES[res.decision]] += 1
+            bk = getattr(res.result, "backend", "") or STRATEGY_NAMES[res.decision]
+            knob = getattr(res.result, "knob", "")
+            key = f"{bk}:{knob}" if knob else bk
+            self.backend_counts[key] = self.backend_counts.get(key, 0) + 1
             lat = t_complete - req.t_arrival
             self._lat.setdefault(req.tier, []).append(lat)
             self._queue_wait.append(t_flush - req.t_arrival)
@@ -88,6 +95,7 @@ class Telemetry:
             "n_completed": self.n_completed,
             "n_batches": self.n_batches,
             "plan_counts": dict(self.plan_counts),
+            "backend_counts": dict(sorted(self.backend_counts.items())),
             "batch_sizes": dict(sorted(self.batch_sizes.items())),
             "deadline_met": dict(sorted(self.deadline_met.items())),
             "deadline_missed": dict(sorted(self.deadline_missed.items())),

@@ -27,6 +27,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.engine import FilteredANNEngine, PlannedResult, package_results
 from ..core.executors import SearchResult
+from ..core.planner import POST_FILTER
 from ..core.predicates import AnyPredicate
 from ..dist.collectives import merge_topk
 from ..models.model import Model
@@ -149,9 +150,10 @@ class ShardedANNEngine:
     # ------------------------------------------------------------------
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         q = np.atleast_2d(q)
-        est, decision, plan_overhead = self.engine.plan(pred, k)
+        est, decision, route, plan_overhead = self.engine.plan_ex(pred, k)
         t0 = time.perf_counter()
-        per_shard = [s.search(q, pred, k, decision, est) for s in self.shards]
+        per_shard = [s.search(q, pred, k, decision, est, route=route)
+                     for s in self.shards]
         d, i = merge_topk(
             np.stack([r.dists for r in per_shard]),
             np.stack([r.ids for r in per_shard]),
@@ -161,7 +163,11 @@ class ShardedANNEngine:
         res = SearchResult(
             d, i, elapsed, per_shard[0].strategy,
             n_expansions=max(r.n_expansions for r in per_shard),
+            backend=per_shard[0].backend, knob=per_shard[0].knob,
         )
+        if not res.backend:
+            from ..core.engine import _default_route_name
+            res.backend, res.knob = _default_route_name(decision)
         return PlannedResult(res, est, decision, plan_overhead)
 
     def batch_query(self, queries: np.ndarray, preds: Sequence[AnyPredicate],
@@ -174,10 +180,11 @@ class ShardedANNEngine:
         fan-out+merge wall time split evenly across rows."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         b = len(preds)
-        ests, decisions, plan_overhead = self.engine.plan_batch(preds, k)
+        ests, decisions, routes, plan_overhead = self.engine.plan_batch_ex(preds, k)
         plan_share = plan_overhead / max(b, 1)
         t0 = time.perf_counter()
-        per_shard = [s.search_batch(queries, preds, k, decisions, ests) for s in self.shards]
+        per_shard = [s.search_batch(queries, preds, k, decisions, ests, routes=routes)
+                     for s in self.shards]
         d, i = merge_topk(
             np.stack([r[0] for r in per_shard]),
             np.stack([r[1] for r in per_shard]),
@@ -185,7 +192,16 @@ class ShardedANNEngine:
         )
         rounds = np.max(np.stack([r[2] for r in per_shard]), axis=0)
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
-        return package_results(d, i, rounds, ests, decisions, share, plan_share)
+        route_names = None
+        if self.shards and self.shards[0].backend_set is not None:
+            classes = self.shards[0].backend_set.classes()
+            route_names = [
+                classes[int(routes[j])]
+                if routes[j] >= 0 and decisions[j] == POST_FILTER else None
+                for j in range(b)
+            ]
+        return package_results(d, i, rounds, ests, decisions, share, plan_share,
+                               route_names=route_names)
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

@@ -1,0 +1,291 @@
+"""Cross-backend conformance harness — the contract every registered ANN
+backend must satisfy before the planner may route to it.
+
+Parametrized over every backend in the registry (a fifth backend added via
+``register_backend`` is automatically picked up).  The contract:
+
+1. **Recall floors** — masked recall@10 against the exact masked oracle
+   meets each declared :class:`KnobTier`'s ``recall_floor``.
+2. **Row independence** — a query's (dists, ids) row is bit-identical
+   whether it runs solo or inside any batch composition, on a corpus
+   engineered to be full of distance ties (the PR 2 discipline).
+3. **Mask safety** — no filtered-out id may ever surface, and no id is
+   returned twice in one row.
+4. **Edges** — empty corpus, tiny corpus (below ``TINY_N`` every backend
+   degenerates to the exact scan), all-masked, |masked| <= k.
+5. **Sharded ≡ unsharded** — per-shard masked top-k lists merged with
+   ``merge_topk`` equal the whole-corpus answer for exact tiers, and meet
+   the same recall floor for approximate tiers.
+
+Plus registry mechanics: register/unregister of a custom toy backend, and
+the IVF-PQ ≥4x memory-reduction acceptance gate vs flat.
+"""
+import numpy as np
+import pytest
+
+from repro.dist.collectives import merge_topk
+from repro.index import BackendSet, make_backend, register_backend, unregister_backend
+from repro.index.registry import (
+    DEFAULT_BACKENDS,
+    TINY_N,
+    KnobTier,
+    _exact_masked,
+    backend_names,
+)
+
+K = 10
+
+
+# ----------------------------------------------------------------------
+# fixtures
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def corpus():
+    """Clustered corpus (so IVF/PQ structure is meaningful) + near-duplicate
+    queries, and a 50% mask."""
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 1, (16, 32)).astype(np.float32)
+    x = (centers[rng.choice(16, 5000)] + 0.3 * rng.normal(0, 1, (5000, 32))).astype(
+        np.float32
+    )
+    q = (x[rng.choice(5000, 20)] + 0.05 * rng.normal(0, 1, (20, 32))).astype(np.float32)
+    mask = rng.random(5000) < 0.5
+    return x, q, mask
+
+
+@pytest.fixture(scope="module")
+def built(corpus):
+    """One built instance per registered backend, shared across tests."""
+    x, _, _ = corpus
+    return {nm: make_backend(nm, x, seed=0) for nm in backend_names()}
+
+
+def _oracle(x, q, mask, k=K):
+    return _exact_masked(x, q, mask, k)
+
+
+def _recall(ids, truth_ids):
+    got = 0
+    for row, t in zip(ids, truth_ids):
+        ts = set(int(v) for v in t if v >= 0)
+        if not ts:
+            continue
+        got += len(ts & set(int(v) for v in row if v >= 0)) / len(ts)
+    return got / len(ids)
+
+
+# ----------------------------------------------------------------------
+# 1. recall floors at every declared tier
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_recall_floor_every_tier(built, corpus, name):
+    x, q, mask = corpus
+    b = built[name]
+    _, truth = _oracle(x, q, mask)
+    for tier in b.knob_grid():
+        _, ids = b.search_masked(q, mask, K, knobs=tier.knobs)
+        r = _recall(ids, truth)
+        assert r >= tier.recall_floor, (
+            f"{name}:{tier.name} recall {r:.3f} < declared floor "
+            f"{tier.recall_floor} (knobs={dict(tier.knobs)})"
+        )
+
+
+# ----------------------------------------------------------------------
+# 2. bit-stable row independence under batch recomposition
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_row_independence_with_ties(built, name):
+    """Rounded coordinates force massive distance ties; every row must be
+    bit-identical solo vs batched vs reversed-batch."""
+    rng = np.random.default_rng(3)
+    x = np.round(rng.normal(0, 1, (600, 16)).astype(np.float32) * 2) / 2
+    q = np.round(rng.normal(0, 1, (9, 16)).astype(np.float32) * 2) / 2
+    mask = rng.random(600) < 0.6
+    b = make_backend(name, x, seed=0)
+    for tier in b.knob_grid():
+        bd, bi = b.search_masked(q, mask, K, knobs=tier.knobs)
+        # solo
+        for j in range(len(q)):
+            sd, si = b.search_masked(q[j : j + 1], mask, K, knobs=tier.knobs)
+            np.testing.assert_array_equal(si[0], bi[j], err_msg=f"{name}:{tier.name} solo row {j}")
+            np.testing.assert_array_equal(sd[0], bd[j])
+        # reversed batch
+        rd, ri = b.search_masked(q[::-1].copy(), mask, K, knobs=tier.knobs)
+        np.testing.assert_array_equal(ri[::-1], bi, err_msg=f"{name}:{tier.name} reversed")
+        np.testing.assert_array_equal(rd[::-1], bd)
+
+
+# ----------------------------------------------------------------------
+# 3. mask / tombstone safety
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_mask_safety_and_no_duplicates(built, corpus, name):
+    x, q, mask = corpus
+    b = built[name]
+    for tier in b.knob_grid():
+        _, ids = b.search_masked(q, mask, K, knobs=tier.knobs)
+        for row in ids:
+            valid = row[row >= 0]
+            assert mask[valid].all(), f"{name}:{tier.name} leaked a masked-out id"
+            assert len(set(valid.tolist())) == len(valid), (
+                f"{name}:{tier.name} returned a duplicate id"
+            )
+
+
+# ----------------------------------------------------------------------
+# 4. edges: empty / tiny / all-masked / |masked| <= k
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_empty_corpus(name):
+    b = make_backend(name, np.zeros((0, 8), np.float32), seed=0)
+    q = np.random.default_rng(0).normal(0, 1, (3, 8)).astype(np.float32)
+    d, i = b.search_masked(q, None, K)
+    assert d.shape == (3, K) and i.shape == (3, K)
+    assert (i == -1).all() and np.isinf(d).all()
+
+
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_tiny_corpus_exact(name):
+    """Below TINY_N every backend must answer exactly (all tiers)."""
+    rng = np.random.default_rng(5)
+    n = TINY_N - 10
+    x = rng.normal(0, 1, (n, 12)).astype(np.float32)
+    q = rng.normal(0, 1, (4, 12)).astype(np.float32)
+    mask = rng.random(n) < 0.7
+    want_d, want_i = _oracle(x, q, mask)
+    b = make_backend(name, x, seed=0)
+    for tier in b.knob_grid():
+        d, i = b.search_masked(q, mask, K, knobs=tier.knobs)
+        np.testing.assert_array_equal(i, want_i, err_msg=f"{name}:{tier.name}")
+        np.testing.assert_allclose(d, want_d, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_all_masked(built, corpus, name):
+    x, q, _ = corpus
+    b = built[name]
+    d, i = b.search_masked(q[:4], np.zeros(len(x), bool), K)
+    assert (i == -1).all() and np.isinf(d).all()
+
+
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_fewer_survivors_than_k(built, corpus, name):
+    """When |masked| <= k, exact tiers (floor >= 0.99) must return exactly
+    the survivor set; approximate tiers may miss survivors living in
+    unprobed lists (that regime is the planner's pre-filter territory) but
+    must still return ONLY survivors, -1/inf padded, no duplicates."""
+    x, q, _ = corpus
+    b = built[name]
+    mask = np.zeros(len(x), bool)
+    keep = np.random.default_rng(9).choice(len(x), 6, replace=False)
+    mask[keep] = True
+    keep_set = set(keep.tolist())
+    for tier in b.knob_grid():
+        d, ids = b.search_masked(q[:5], mask, K, knobs=tier.knobs)
+        for dr, row in zip(d, ids):
+            valid = [int(v) for v in row if v >= 0]
+            assert set(valid) <= keep_set, f"{name}:{tier.name} leaked a non-survivor"
+            assert len(set(valid)) == len(valid)
+            assert np.isinf(dr[row == -1]).all()  # padding contract
+            if tier.recall_floor >= 0.99:
+                assert set(valid) == keep_set, (
+                    f"{name}:{tier.name} (exact) missed a passing survivor"
+                )
+
+
+# ----------------------------------------------------------------------
+# 5. sharded == unsharded merge identity
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_sharded_merge_identity(corpus, name):
+    """Per-shard masked top-k + merge_topk vs the whole corpus.  Exact for
+    tiers with recall_floor >= 0.99; approximate tiers keep the floor (any
+    global top-k element lives in its own shard's top-k, so sharding can
+    only help recall for exact scans)."""
+    x, q, mask = corpus
+    n_shards = 4
+    bounds = np.linspace(0, len(x), n_shards + 1).astype(int)
+    whole = make_backend(name, x, seed=0)
+    _, truth = _oracle(x, q, mask)
+    for tier in whole.knob_grid():
+        wd, wi = whole.search_masked(q, mask, K, knobs=tier.knobs)
+        ds_, is_ = [], []
+        for s in range(n_shards):
+            lo, hi = bounds[s], bounds[s + 1]
+            shard = make_backend(name, x[lo:hi], seed=s)
+            sd, si = shard.search_masked(q, mask[lo:hi], K, knobs=tier.knobs)
+            si = np.where(si >= 0, si + lo, -1).astype(np.int32)
+            ds_.append(sd)
+            is_.append(si)
+        md, mi = merge_topk(np.stack(ds_), np.stack(is_), K)
+        if tier.recall_floor >= 0.99:
+            np.testing.assert_array_equal(mi, wi, err_msg=f"{name}:{tier.name}")
+            np.testing.assert_allclose(md, wd, rtol=1e-5, atol=1e-5)
+        else:
+            r = _recall(mi, truth)
+            assert r >= tier.recall_floor, (
+                f"sharded {name}:{tier.name} recall {r:.3f} < {tier.recall_floor}"
+            )
+
+
+# ----------------------------------------------------------------------
+# registry mechanics + a custom backend passing the same gauntlet
+# ----------------------------------------------------------------------
+class _ToyExactBackend:
+    """Minimal conforming backend: exact numpy scan with composite keys."""
+
+    name = "toy"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def build(self, corpus):
+        self.vectors = np.ascontiguousarray(corpus, np.float32)
+        return self
+
+    def search_masked(self, queries, mask, k, knobs=None):
+        return _exact_masked(self.vectors, queries, mask, k)
+
+    def memory_bytes(self):
+        return int(self.vectors.nbytes)
+
+    def knob_grid(self):
+        return (KnobTier("exact", {}, recall_floor=0.99),)
+
+
+def test_register_unregister_custom_backend(corpus):
+    x, q, mask = corpus
+    register_backend("toy", _ToyExactBackend)
+    try:
+        assert "toy" in backend_names()
+        # duplicate registration refused unless overwrite=True
+        with pytest.raises(ValueError):
+            register_backend("toy", _ToyExactBackend)
+        register_backend("toy", _ToyExactBackend, overwrite=True)
+        b = make_backend("toy", x, seed=0)
+        want_d, want_i = _oracle(x, q, mask)
+        d, i = b.search_masked(q, mask, K)
+        np.testing.assert_array_equal(i, want_i)
+        # a BackendSet over custom names enumerates classes in given order
+        bs = BackendSet.build(x, names=("toy", "flat"), seed=0)
+        assert bs.class_names() == ("toy:exact", "flat:exact")
+        sd, si = bs.search_class(0, q, mask, K)
+        np.testing.assert_array_equal(si, want_i)
+    finally:
+        unregister_backend("toy")
+    assert "toy" not in backend_names()
+    with pytest.raises(KeyError):
+        make_backend("toy", x)
+
+
+def test_backendset_memory_and_pq_reduction(built):
+    """Acceptance gate: IVF-PQ's scan-resident footprint is >= 4x smaller
+    than the flat baseline (the re-rank vectors are accounted separately,
+    as the paper's PQ budget does)."""
+    mem_flat = built["flat"].memory_bytes()
+    mem_pq = built["ivfpq"].memory_bytes()
+    assert mem_flat >= 4 * mem_pq, (
+        f"ivfpq memory {mem_pq} not >=4x smaller than flat {mem_flat}"
+    )
+    assert built["ivfpq"].rerank_bytes > 0  # re-rank cost is declared, not hidden

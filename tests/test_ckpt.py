@@ -84,3 +84,41 @@ def test_replan_mesh_shapes():
     assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
     with pytest.raises(ValueError):
         replan_mesh(8, 16)
+
+
+def test_planner_state_through_checkpointer(tmp_path):
+    """The planner's state_dict — including the routing subtree with its
+    byte-encoded class names — survives a Checkpointer save/restore, and a
+    pre-routing checkpoint (no 'route' subtree) restores to a plan-only
+    planner (backward compatibility with checkpoints written before the
+    backend registry existed)."""
+    from repro.core.planner import CorePlanner, PlannerFeatures
+
+    F = PlannerFeatures.N_FEATURES
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (200, F)).astype(np.float32)
+    y = (x[:, 3] > 0).astype(np.int32)
+    classes = ("flat:exact", "ivf:fast", "ivfpq:precise")
+    p = CorePlanner(n_features=F, seed=0).fit(x, y)
+    legacy_state = p.state_dict()                      # plan-only
+    p.fit_routing(x, np.minimum(y * 2, 2), classes)
+    routed_state = p.state_dict()
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, legacy_state)
+    ck.save(2, routed_state)
+
+    def tmpl(tree):
+        return jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(np.asarray(v).shape, np.asarray(v).dtype),
+            tree,
+        )
+
+    q = CorePlanner(n_features=F, seed=7).load_state(ck.restore(2, tmpl(routed_state)))
+    assert q.route_classes == classes
+    np.testing.assert_array_equal(q.route(x), p.route(x))
+    np.testing.assert_allclose(q.predict_proba(x), p.predict_proba(x), atol=1e-6)
+
+    r = CorePlanner(n_features=F, seed=7).load_state(ck.restore(1, tmpl(legacy_state)))
+    assert r.route_classes is None and r.route(x) is None
+    np.testing.assert_allclose(r.predict_proba(x), p.predict_proba(x), atol=1e-6)

@@ -107,3 +107,58 @@ def test_planner_proba_range():
     p = CorePlanner(seed=0).fit(x, y)
     proba = p.predict_proba(x)
     assert (proba >= 0).all() and (proba <= 1).all()
+
+
+# ----------------------------------------------------------------------
+# routing head + checkpoint-state backward compatibility
+# ----------------------------------------------------------------------
+def test_routing_head_learns_and_is_deterministic():
+    """The softmax routing head recovers a feature-aligned class split and
+    two same-seed fits route identically."""
+    x, _ = _toy_problem(500, seed=2)
+    classes = ("flat:exact", "ivf:fast", "acorn:precise")
+    y = (np.digitize(x[:, 3], [-0.5, 0.5])).astype(np.int32)   # 3 bands on 'sel'
+    p1 = CorePlanner(n_features=F, seed=0).fit_routing(x, y, classes)
+    p2 = CorePlanner(n_features=F, seed=0).fit_routing(x, y, classes)
+    r1, r2 = p1.route(x), p2.route(x)
+    assert p1.route_classes == classes
+    assert (r1 == y).mean() > 0.9, f"routing train acc {(r1 == y).mean()}"
+    np.testing.assert_array_equal(r1, r2)
+
+
+def test_routing_ignores_unrouted_rows():
+    """Rows labelled -1 (legacy / no winner) are excluded from the fit."""
+    x, _ = _toy_problem(300, seed=4)
+    y = (x[:, 3] > 0).astype(np.int32)
+    y[::3] = -1
+    p = CorePlanner(n_features=F, seed=0).fit_routing(x, y, ("a:x", "b:y"))
+    keep = y >= 0
+    assert (p.route(x)[keep] == y[keep]).mean() > 0.9
+
+
+def test_state_dict_roundtrip_with_routing():
+    x, y = _toy_problem(300)
+    classes = ("flat:exact", "ivf:fast")
+    ry = (x[:, 3] > 0).astype(np.int32)
+    p = CorePlanner(n_features=F, seed=0).fit(x, y).fit_routing(x, ry, classes)
+    q = CorePlanner(n_features=F, seed=9).load_state(p.state_dict())
+    np.testing.assert_allclose(q.predict_proba(x), p.predict_proba(x), atol=1e-6)
+    assert q.route_classes == classes
+    np.testing.assert_array_equal(q.route(x), p.route(x))
+
+
+def test_pre_routing_state_loads_plan_only():
+    """Backward compat: a checkpoint written BEFORE the routing head existed
+    (no 'route' subtree) must load and serve plan-only decisions."""
+    x, y = _toy_problem(300)
+    p = CorePlanner(n_features=F, seed=0).fit(x, y)
+    legacy = p.state_dict()
+    assert "route" not in legacy            # no head fitted -> no subtree
+    q = CorePlanner(n_features=F, seed=1).load_state(legacy)
+    assert q.route_classes is None and q.route(x) is None
+    np.testing.assert_allclose(q.predict_proba(x), p.predict_proba(x), atol=1e-6)
+    # and loading a legacy state over a ROUTED planner clears the stale head
+    r = CorePlanner(n_features=F, seed=0).fit(x, y).fit_routing(
+        x, (x[:, 3] > 0).astype(np.int32), ("a:x", "b:y"))
+    r.load_state(legacy)
+    assert r.route_classes is None and r.route(x) is None

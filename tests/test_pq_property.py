@@ -1,0 +1,95 @@
+"""Hypothesis property suite for the IVF-PQ quantizer (skips cleanly when
+hypothesis is absent, like ``test_property.py``).
+
+Two families of invariants from ``repro.index.pq``'s docstring contract:
+
+* **encode/decode round trip** — per-subspace reconstruction error is
+  bounded by the index's declared ``radius_sq`` for corpus points, and
+  decode(encode(x)) is the nearest-codeword reconstruction (re-encoding a
+  decoded point is a fixed point).
+* **ADC vs exact** — the uint8 floor-quantized LUT distance only ever
+  under-estimates the decoded distance, by less than the declared bound
+  ``M * scale``; and on the re-rank candidate set the exact rescoring
+  returns distances equal to a brute-force oracle (the ADC approximation
+  only picks *which* candidates get rescored, never the reported numbers).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.index import IVFPQIndex  # noqa: E402
+
+
+def _corpus(seed: int, n: int, d: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (8, d)).astype(np.float32)
+    return (centers[rng.choice(8, n)] + 0.25 * rng.normal(0, 1, (n, d))).astype(
+        np.float32
+    )
+
+
+@st.composite
+def _index_params(draw):
+    seed = draw(st.integers(0, 50))
+    n = draw(st.integers(256, 700))
+    d = draw(st.sampled_from([8, 16, 20, 32]))
+    m = draw(st.sampled_from([None, 2, 4]))
+    return seed, n, d, m
+
+
+@given(params=_index_params())
+@settings(max_examples=12, deadline=None)
+def test_encode_decode_error_bounded_by_radius(params):
+    seed, n, d, m = params
+    x = _corpus(seed, n, d)
+    ix = IVFPQIndex(x, n_lists=8, m=m, n_codes=32, seed=seed).build(iters=4)
+    codes = ix.encode(x)
+    rec = ix.decode(codes)
+    # per-subspace squared reconstruction error <= declared radius for every
+    # corpus point (radius_sq is the max over the corpus, by construction)
+    dsub, M = ix.dsub, ix.m
+    xp = ix._pad(x)
+    rp = ix._pad(rec)
+    for j in range(M):
+        err = ((xp[:, j * dsub:(j + 1) * dsub] - rp[:, j * dsub:(j + 1) * dsub]) ** 2).sum(1)
+        assert err.max() <= ix.radius_sq[j] + 1e-4
+    # decode is a fixed point of the round trip
+    np.testing.assert_array_equal(ix.encode(rec), codes)
+
+
+@given(params=_index_params(), qseed=st.integers(0, 100))
+@settings(max_examples=12, deadline=None)
+def test_adc_underestimates_decoded_within_bound(params, qseed):
+    seed, n, d, m = params
+    x = _corpus(seed, n, d)
+    ix = IVFPQIndex(x, n_lists=8, m=m, n_codes=32, seed=seed).build(iters=4)
+    q = np.random.default_rng(qseed).normal(0, 1, d).astype(np.float32)
+    ids = np.arange(min(128, n), dtype=np.int64)
+    adc, bound = ix.adc_distances(q, ids)
+    dec = ix.decode(ix.encode(x[ids]))
+    qp, dp = ix._pad(q[None])[0], ix._pad(dec)
+    exact_decoded = ((dp - qp[None]) ** 2).sum(1)
+    diff = exact_decoded - adc.astype(np.float64)
+    # floor quantization only ever under-estimates, by < M * scale
+    assert diff.min() >= -1e-3
+    assert diff.max() < bound + 1e-3
+
+
+@given(params=_index_params(), qseed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_rerank_distances_match_bruteforce_oracle(params, qseed):
+    """On whatever candidate set ADC picked, the returned distances are the
+    EXACT L2 distances (monotone-consistent with a brute-force rescoring)."""
+    seed, n, d, m = params
+    x = _corpus(seed, n, d)
+    ix = IVFPQIndex(x, n_lists=8, m=m, n_codes=32, seed=seed).build(iters=4)
+    q = np.random.default_rng(qseed).normal(0, 1, d).astype(np.float32)
+    dists, ids = ix.search(q[None], k=10, nprobe=4, rerank=32)
+    got_d, got_i = dists[0], ids[0]
+    valid = got_i >= 0
+    oracle = ((x[got_i[valid]] - q[None]) ** 2).sum(1)
+    np.testing.assert_allclose(got_d[valid], oracle, rtol=1e-5, atol=1e-5)
+    # ascending by construction (composite keys sort on distance bits)
+    assert (np.diff(got_d[valid]) >= -1e-6).all()

@@ -264,7 +264,7 @@ def test_plan_cache_purity_and_invalidation(system):
     assert len(eng.plan_cache) >= 1
     eng.estimator.fit(list(ps), list(sels))
     est2, dec2, _ = eng.plan(p, K)
-    assert (est2, dec2) == eng._plan_cold(p, K)   # fresh, not the stale memo
+    assert (est2, dec2) == eng._plan_cold(p, K)[:2]   # fresh, not the stale memo
 
 
 def test_engine_stats_accessor_dnf(system):
@@ -380,3 +380,78 @@ def test_feedback_sampling_is_seeded(system):
         picks.append([fb.observe(r, x) for r, x in zip(trace, res)])
     assert picks[0] == picks[1]
     assert 0 < sum(picks[0]) < 50
+
+
+# ----------------------------------------------------------------------
+# routed runtime: replay determinism over the (plan, backend, knob) space
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def routed_system():
+    """Engine with the full backend roster + fitted routing head."""
+    ds = make_dataset("arxiv", scale="4000", seed=0)
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num,
+        EngineConfig(n_lists=32, seed=0, backends=("flat", "ivf", "ivfpq", "acorn")),
+    ).build()
+    tq, tp, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 24, kinds=ds.filter_kinds, seed=1,
+    )
+    eng.fit(tq, tp, k=K)
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 16, kinds=ds.filter_kinds,
+        sel_range=(0.01, 0.4), seed=2,
+    )
+    return ds, eng, qs, list(preds)
+
+
+def test_routed_replay_deterministic(routed_system):
+    """Same trace + seed => identical (plan, backend, knob) per request and
+    identical result ids across two runs — routing is part of the
+    deterministic ledger, not a new source of nondeterminism."""
+    _, eng, qs, preds = routed_system
+    assert eng.planner.route_classes is not None    # the head actually fitted
+    trace = _trace(qs, preds)
+    cfg = SchedulerConfig(max_batch=16, max_wait=0.004)
+    a = OnlineRuntime(eng, cfg).run_trace(trace)
+    b = OnlineRuntime(eng, cfg).run_trace(trace)
+    assert a.batches == b.batches
+    ca, cb = a.telemetry.counters(), b.telemetry.counters()
+    assert ca == cb
+    assert "backend_counts" in ca
+    for rid in a.results:
+        ra, rb = a.results[rid], b.results[rid]
+        assert (ra.decision, ra.result.backend, ra.result.knob) == (
+            rb.decision, rb.result.backend, rb.result.knob)
+        assert np.array_equal(ra.result.ids, rb.result.ids)
+    # every completed request carries a backend/knob name
+    assert all(r.result.backend for r in a.results.values())
+
+
+def test_routed_backend_mix_counter(routed_system):
+    """The telemetry backend-mix counter sums to completions and only names
+    registered (backend[:tier]) keys or plan names for un-routed rows."""
+    _, eng, qs, preds = routed_system
+    trace = _trace(qs, preds, n=80, seed=9)
+    rep = OnlineRuntime(eng, SchedulerConfig(max_batch=8)).run_trace(trace)
+    c = rep.telemetry.counters()
+    mix = c["backend_counts"]
+    assert sum(mix.values()) == c["n_completed"] == 80
+    valid_backends = {"flat", "ivf", "ivfpq", "acorn", "pre", "post", "ipre"}
+    for key in mix:
+        assert key.split(":")[0] in valid_backends, key
+
+
+def test_routed_feedback_refits_routing_head(routed_system):
+    """The online refit fits a routing head on logged (label, route) pairs
+    and the swapped-in candidate keeps serving the same class enumeration."""
+    ds, eng, qs, preds = routed_system
+    fb = OnlineFeedback(eng, FeedbackConfig(
+        sample_rate=1.0, refit_every=32, min_examples=24, seed=3))
+    for i in range(48):
+        q, p = qs[i % len(qs)], preds[i % len(preds)]
+        res = eng.query(q, p, K)
+        fb.observe(RuntimeRequest(i, 0.0, q, p, K), res)
+    assert any(e.route >= 0 for e in fb.log)       # shadow labels carry routes
+    if fb.refit():                                 # guard may decline; if it
+        assert eng.planner.route_classes == tuple(  # swaps, routing survives
+            eng.backend_set.class_names())
