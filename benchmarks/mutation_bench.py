@@ -1,0 +1,189 @@
+"""Live-corpus mutation benchmark: churn cost, staleness, compaction.
+
+Three measurements, written to ``BENCH_mutation.json`` at the repo root:
+
+1. **Steady-state serving under churn** — starting from a clean build, the
+   corpus is mutated to tombstone fractions of 2/5/10% (plus a ~2% append
+   segment) and the batched query workload is re-timed at each level
+   against the build-once baseline.  Acceptance target: latency ratio
+   <= 1.3x the clean engine at <= 10% tombstones, with exact result
+   equality against the live ground truth for exact plans.
+2. **Write throughput** — rows/s through ``upsert`` and ``delete``
+   (measured over the same churn burst) and the compaction wall time.
+3. **Compaction equivalence** — post-compaction ground truth must equal
+   the pre-compaction live ground truth translated through ``id_map``
+   (the tentpole bit-equality invariant), and the served recall against
+   live truth is reported before/after.
+
+    PYTHONPATH=src python -m benchmarks.mutation_bench           # 100k fixture
+    REPRO_BENCH_SCALE=5000 PYTHONPATH=src python -m benchmarks.mutation_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DATASET = "arxiv"
+K = 10
+TOMBSTONE_FRACS = (0.02, 0.05, 0.10)
+SEG_FRAC = 0.02
+LATENCY_RATIO_TARGET = 1.3
+
+
+def _time_workload(eng, qs, preds, repeats=3):
+    """Mean per-query latency of the batched path (best of ``repeats``)."""
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = eng.batch_query(qs, preds, k=K)
+        best = min(best, time.perf_counter() - t0)
+    return best / len(preds), res
+
+
+def _live_recall(eng, qs, preds, res):
+    """Recall of served ids against the engine's own live ground truth."""
+    got = 0.0
+    for q, p, pr in zip(qs, preds, res):
+        truth = eng.ground_truth(q, p, k=K)[0]
+        ts = set(int(t) for t in truth if t >= 0)
+        if not ts:
+            continue
+        ids = pr.result.ids[0]
+        got += len(ts & set(int(v) for v in ids if v >= 0)) / len(ts)
+    return got / len(preds)
+
+
+def main():
+    from repro.core import EngineConfig, FilteredANNEngine
+
+    from .common import corpus_n, eval_queries, get_fixture
+
+    print(f"mutation_bench: {DATASET} n={corpus_n()}")
+    ds, clean_eng, _, timings = get_fixture(DATASET)
+    n = int(ds.vectors.shape[0])
+    qs, preds, _ = eval_queries(ds, n=32, sel_range=(0.02, 0.3), seed=9)
+    preds = list(preds)
+
+    base_lat, base_res = _time_workload(clean_eng, qs, preds)
+    base_recall = _live_recall(clean_eng, qs, preds, base_res)
+    print(f"  clean baseline: {base_lat*1e3:.2f} ms/query  "
+          f"recall@{K}={base_recall:.3f}")
+
+    # a second engine takes the churn (the fixture engine must stay clean
+    # for every other benchmark sharing the cache)
+    live_eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num,
+        EngineConfig(seed=0, max_tombstone_frac=0.5, max_segment_frac=0.5),
+    ).build()
+    rng = np.random.default_rng(17)
+    perm = rng.permutation(n)
+
+    # one append burst up front (~SEG_FRAC of the corpus), timed
+    n_seg = max(int(n * SEG_FRAC), 1)
+    rows = rng.choice(n, n_seg)
+    t0 = time.perf_counter()
+    live_eng.upsert(ds.vectors[rows], ds.cat[rows], ds.num[rows])
+    t_upsert = time.perf_counter() - t0
+
+    out = {"n": n, "dataset": DATASET, "k": K,
+           "base_latency_ms": round(base_lat * 1e3, 4),
+           "base_recall": round(base_recall, 4),
+           "levels": []}
+    deleted = 0
+    t_delete = 0.0
+    all_ok = True
+    for frac in TOMBSTONE_FRACS:
+        target = int(frac * live_eng.live.n_total)
+        kill = perm[deleted:target]
+        t0 = time.perf_counter()
+        live_eng.delete(kill)
+        t_delete += time.perf_counter() - t0
+        deleted = target
+        lat, res = _time_workload(live_eng, qs, preds)
+        rec = _live_recall(live_eng, qs, preds, res)
+        ratio = lat / base_lat
+        ok = ratio <= LATENCY_RATIO_TARGET
+        all_ok = all_ok and ok
+        row = {
+            "tombstone_frac": frac,
+            "segment_frac": round(live_eng.live.segment_frac, 4),
+            "latency_ms": round(lat * 1e3, 4),
+            "latency_ratio": round(ratio, 3),
+            "recall": round(rec, 4),
+            "ok": bool(ok),
+        }
+        out["levels"].append(row)
+        print(f"  tombstones {frac:.0%}: {lat*1e3:.2f} ms/query "
+              f"(ratio {ratio:.2f}x, recall {rec:.3f}) "
+              f"{'PASS' if ok else 'FAIL'}")
+
+    out["write_throughput"] = {
+        "upsert_rows_per_s": round(n_seg / max(t_upsert, 1e-9), 1),
+        "delete_rows_per_s": round(deleted / max(t_delete, 1e-9), 1),
+    }
+    print(f"  writes: {out['write_throughput']['upsert_rows_per_s']:.0f} "
+          f"upserts/s  {out['write_throughput']['delete_rows_per_s']:.0f} "
+          f"deletes/s")
+
+    # compaction equivalence: live truth translates bit-exactly via id_map
+    gt_live = np.stack([live_eng.ground_truth(q, p, k=K)[0]
+                        for q, p in zip(qs, preds)])
+    t0 = time.perf_counter()
+    id_map = live_eng.compact()
+    t_compact = time.perf_counter() - t0
+    gt_post = np.stack([live_eng.ground_truth(q, p, k=K)[0]
+                        for q, p in zip(qs, preds)])
+    tr = np.where(gt_live >= 0, id_map[np.maximum(gt_live, 0)], -1)
+    bit_equal = bool((tr == gt_post).all())
+    lat_post, res_post = _time_workload(live_eng, qs, preds)
+    out["compaction"] = {
+        "seconds": round(t_compact, 3),
+        "bit_equal_ground_truth": bit_equal,
+        "post_latency_ratio": round(lat_post / base_lat, 3),
+        "post_recall": round(_live_recall(live_eng, qs, preds, res_post), 4),
+    }
+    print(f"  compaction: {t_compact:.2f}s  ground-truth bit-equal via "
+          f"id_map: {'PASS' if bit_equal else 'FAIL'}")
+    out["steady_state_ok"] = bool(all_ok)
+    print(f"steady-state latency <= {LATENCY_RATIO_TARGET}x at <=10% "
+          f"tombstones: {'PASS' if all_ok else 'FAIL'}")
+
+    # headline scale owns BENCH_mutation.json; other scales write a
+    # scale-suffixed (gitignored) file so they can't clobber the committed
+    # 100k record
+    name = "BENCH_mutation.json" if n == 100_000 else f"BENCH_mutation_n{n}.json"
+    path = REPO_ROOT / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+def run():
+    """`benchmarks/run.py` adaptor: one row per churn level."""
+    out = main()
+    rows = [
+        {
+            "name": f"tombstones_{int(r['tombstone_frac']*100)}pct",
+            "mean_us": int(r["latency_ms"] * 1e3),
+            "ratio": r["latency_ratio"],
+            "recall": r["recall"],
+        }
+        for r in out["levels"]
+    ]
+    rows.append({
+        "name": "compaction",
+        "mean_us": int(out["compaction"]["seconds"] * 1e6),
+        "ratio": out["compaction"]["post_latency_ratio"],
+        "recall": out["compaction"]["post_recall"],
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("REPRO_BENCH_SCALE", "reduced")   # 100k fixture
+    main()

@@ -76,6 +76,13 @@ def main() -> None:
             f"speedup={r['speedup']};deadline_hit={r['deadline_hit_rate']}"
         )
 
+    from . import mutation_bench
+    for r in mutation_bench.run():
+        print(
+            f"mutation_{r['name']},{r['mean_us']},"
+            f"latency_ratio={r['ratio']};recall={r['recall']}"
+        )
+
     print(f"# total bench wall time {time.time()-t_start:.1f}s", file=sys.stderr)
 
 

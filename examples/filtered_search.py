@@ -92,3 +92,36 @@ dq = np.stack([ds.vectors[i] for i in (1, 2, 3)])
 for out, p in zip(eng.batch_query(dq, dnf_preds, k=K), dnf_preds):
     print(f"  plan={out.result.strategy:5s} sel={out.est_selectivity:.4f} "
           f"(exact popcount)  {p}")
+
+# ----------------------------------------------------------------------
+# Live-corpus churn: upserts make range statistics stale (sel_is_exact
+# demotes — fail closed, never wrong), deletes stay exact via tombstone
+# popcounts, and compaction restores full exactness.
+# ----------------------------------------------------------------------
+print("\nlive-corpus churn (watch sel_is_exact):")
+rp = Predicate(ranges=(RangePred(0, ((q10, q25),)),))
+s, exact = eng.estimator.estimate_ex(rp)
+print(f"  clean corpus:    sel={s:.4f} sel_is_exact={exact}")
+
+rng = np.random.default_rng(0)
+new_rows = rng.choice(len(ds.vectors), 50)
+eng.upsert(ds.vectors[new_rows], ds.cat[new_rows], ds.num[new_rows])
+s, exact = eng.estimator.estimate_ex(rp)
+print(f"  after upsert:    sel={s:.4f} sel_is_exact={exact} "
+      "(range buckets stale -> demoted)")
+
+lp = Predicate(labels=(LabelEq(0, 2),))
+eng.delete(np.arange(30))
+s, exact = eng.estimator.estimate_ex(lp)
+print(f"  label pred:      sel={s:.4f} sel_is_exact={exact} "
+      "(bitmaps extend + tombstones compose: still exact)")
+
+live = eng.stats()["live"]
+print(f"  live view: {live['live_count']}/{live['n_total']} rows "
+      f"(tombstones {live['tombstone_frac']:.2%}, "
+      f"segment {live['segment_frac']:.2%})")
+
+eng.compact()
+s, exact = eng.estimator.estimate_ex(rp)
+print(f"  after compact:   sel={s:.4f} sel_is_exact={exact} "
+      "(rebuilt: exact again)")

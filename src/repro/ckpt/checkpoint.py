@@ -45,30 +45,38 @@ class Checkpointer:
         self._thread: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------------
-    def save(self, step: int, tree: Any, blocking: bool = True):
+    def save(self, step: int, tree: Any, blocking: bool = True,
+             meta: Optional[Dict[str, Any]] = None):
+        """``meta`` is a small JSON-serialisable dict stored in the manifest
+        alongside the leaves — e.g. a live-corpus generation counter, so a
+        restored serving engine knows which corpus version the snapshot
+        captured (:meth:`read_meta`)."""
         host = [(k, np.asarray(v)) for k, v in _flatten(tree)]
         if blocking:
-            self._write(step, host)
+            self._write(step, host, meta)
         else:
             self.wait()
-            self._thread = threading.Thread(target=self._write, args=(step, host))
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta))
             self._thread.start()
 
-    def save_async(self, step: int, tree: Any):
-        self.save(step, tree, blocking=False)
+    def save_async(self, step: int, tree: Any,
+                   meta: Optional[Dict[str, Any]] = None):
+        self.save(step, tree, blocking=False, meta=meta)
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host):
+    def _write(self, step: int, host, meta: Optional[Dict[str, Any]] = None):
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+        manifest: Dict[str, Any] = {"step": step, "leaves": {},
+                                    "meta": meta or {}}
         for key, arr in host:
             fn = key.replace("/", "__") + ".npy"
             np.save(os.path.join(tmp, fn), arr)
@@ -101,6 +109,13 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def read_meta(self, step: int) -> Dict[str, Any]:
+        """Manifest ``meta`` dict for one step (``{}`` for checkpoints
+        written before meta support)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f).get("meta", {})
 
     def restore(
         self,

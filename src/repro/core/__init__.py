@@ -1,5 +1,6 @@
 from .predicates import LabelEq, Predicate, RangePred, Not, Or, AnyPredicate, iter_leaves, NULL_CODE
 from .stats import DatasetStats
+from .corpus import CompactionPolicy, LiveCorpus
 from .selectivity import SelectivityEstimator
 from .planner import CorePlanner, PlannerFeatures, PRE_FILTER, POST_FILTER, INDEXED_PRE
 from .executors import (
@@ -14,6 +15,7 @@ __all__ = [
     "LabelEq", "Predicate", "RangePred", "Not", "Or", "AnyPredicate",
     "iter_leaves", "NULL_CODE",
     "DatasetStats", "SelectivityEstimator",
+    "CompactionPolicy", "LiveCorpus",
     "CorePlanner", "PlannerFeatures", "PRE_FILTER", "POST_FILTER", "INDEXED_PRE",
     "PreFilterExec", "IndexedPreFilterExec", "PostFilterExec",
     "SearchResult", "recall_at_k",

@@ -21,6 +21,7 @@ import numpy as np
 from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
 from ..index.registry import BackendSet
+from .corpus import CompactionPolicy, LiveCorpus
 from .executors import (
     IndexedPreFilterExec,
     PostFilterExec,
@@ -57,6 +58,12 @@ class EngineConfig:
     # recall@k a (backend, knob) class must hit on a training query before
     # utility gets a say in the routing label; below it, max-recall wins.
     route_recall_target: float = 0.9
+    # live-corpus compaction thresholds (see core.corpus.CompactionPolicy):
+    # churn past any of these makes needs_compaction()/maybe_compact() fold
+    # segment + tombstones into a rebuilt index
+    max_tombstone_frac: float = 0.20
+    max_segment_frac: float = 0.20
+    max_list_drift: float = 1.75
 
 
 @dataclasses.dataclass
@@ -198,6 +205,101 @@ def _execute_grouped(
     return out_d, out_i, rounds
 
 
+def _live_execute_grouped(
+    pre_exec: PreFilterExec,
+    ipre_exec: Optional[IndexedPreFilterExec],
+    post_exec: PostFilterExec,
+    queries: np.ndarray,
+    preds: Sequence[AnyPredicate],
+    k: int,
+    decisions: np.ndarray,
+    ests: np.ndarray,
+    live: LiveCorpus,
+    routes: Optional[np.ndarray] = None,
+    backend_set: Optional[BackendSet] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Tombstone/segment-composing twin of ``_execute_grouped`` — the one
+    batch executor every query takes once the corpus mutated.
+
+    Per decision group the base corpus answers exactly as before, except
+    every candidate mask is ANDed with the live bitmap (tombstoned rows can
+    never surface) and masks from the extended attribute index (length
+    ``n_total``) are sliced back to the base rows the executors hold.  The
+    append segment is searched by a plain masked scan (it stays small
+    between compactions) through the SAME ``PreFilterExec`` kernel path the
+    base uses, and the two parts merge with ``merge_topk`` — base part
+    stacked first, so the composite column tie-break keeps handle order,
+    which is the bit-equality invariant against a fresh build of the
+    equivalent post-mutation corpus (handle -> compacted-position maps are
+    monotone).
+    """
+    from ..dist.collectives import merge_topk
+
+    b = len(preds)
+    out_d = np.full((b, k), np.inf, np.float32)
+    out_i = np.full((b, k), -1, np.int32)
+    rounds = np.zeros(b, np.int64)
+    alive = live.alive_mask()
+    base_n = live.base_n
+    alive_base, alive_seg = alive[:base_n], alive[base_n:]
+    seg_exec = (
+        PreFilterExec(live.seg_vectors(), live.seg_cat(), live.seg_num())
+        if live.seg_n else None
+    )
+    seg_masks: dict = {}
+
+    def seg_mask(pred) -> np.ndarray:
+        if pred not in seg_masks:
+            seg_masks[pred] = pred.eval(live.seg_cat(), live.seg_num()) & alive_seg
+        return seg_masks[pred]
+
+    def finish(rows, pred, bd, bi):
+        if seg_exec is not None and seg_mask(pred).any():
+            res = seg_exec.search_masked(queries[rows], seg_mask(pred), k)
+            si = np.where(res.ids >= 0, res.ids + base_n, -1).astype(np.int32)
+            bd, bi = merge_topk(np.stack([bd, res.dists]), np.stack([bi, si]), k)
+        out_d[rows], out_i[rows] = bd, bi
+
+    for decision, ex in ((PRE_FILTER, pre_exec), (INDEXED_PRE, ipre_exec or pre_exec)):
+        groups: dict = {}
+        for i in range(b):
+            if decisions[i] == decision:
+                groups.setdefault(preds[i], []).append(i)
+        for pred, rows in groups.items():
+            m = ex.candidate_mask(pred)
+            res = ex.search_masked(queries[rows], m[:base_n] & alive_base, k)
+            finish(rows, pred, res.dists, res.ids)
+    routed = routes is not None and backend_set is not None
+    post_rows = [
+        i for i in range(b)
+        if decisions[i] == POST_FILTER and not (routed and routes[i] >= 0)
+    ]
+    if post_rows:
+        d, ids, rnd = post_exec.search_rows(
+            queries[post_rows], [preds[i] for i in post_rows], k,
+            [float(ests[i]) for i in post_rows], alive=alive_base,
+        )
+        rounds[post_rows] = rnd
+        groups = {}
+        for j, i in enumerate(post_rows):
+            groups.setdefault(preds[i], []).append(j)
+        for pred, js in groups.items():
+            finish([post_rows[j] for j in js], pred, d[js], ids[js])
+    if routed:
+        groups = {}
+        for i in range(b):
+            if decisions[i] == POST_FILTER and routes[i] >= 0:
+                groups.setdefault((int(routes[i]), preds[i]), []).append(i)
+        mask_ex = ipre_exec or pre_exec
+        base_masks: dict = {}
+        for (ci, pred), rows in groups.items():
+            if pred not in base_masks:
+                base_masks[pred] = mask_ex.candidate_mask(pred)[:base_n] & alive_base
+            d, ids = backend_set.search_class(ci, queries[rows], base_masks[pred], k)
+            finish(rows, pred, d[:, :k], ids[:, :k])
+    return out_d, out_i, rounds
+
+
 class PlanCache:
     """LRU memo of ``(canonical predicate key, k) -> (est, decision, route)``.
 
@@ -221,12 +323,20 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
     def validate_epoch(self, epoch: Tuple) -> None:
-        """Drop every entry if the (planner head, estimator) pair the cached
-        plans were computed under has changed — catches direct
-        ``estimator.fit()`` calls that bypass the engine's own clear hooks."""
+        """Drop every entry if the (planner head, estimator, corpus
+        generation) tuple the cached plans were computed under has changed —
+        catches direct ``estimator.fit()`` calls that bypass the engine's
+        own clear hooks, and (since the corpus generation joined the epoch)
+        any live-corpus mutation, whose tombstones/appends change exact
+        selectivities.  Epoch-mismatch drops are counted separately from
+        capacity evictions so mutation-driven churn is observable in
+        ``stats()``."""
         if epoch != self.epoch:
+            if self.epoch:
+                self.invalidations += 1
             self._store.clear()
             self.epoch = epoch
 
@@ -255,6 +365,7 @@ class PlanCache:
         return {
             "size": len(self._store), "capacity": self.capacity,
             "hits": self.hits, "misses": self.misses, "evictions": self.evictions,
+            "invalidations": self.invalidations,
         }
 
 
@@ -275,6 +386,42 @@ class CorpusShard:
     post_exec: PostFilterExec
     ipre_exec: Optional[IndexedPreFilterExec] = None
     backend_set: Optional[BackendSet] = None   # per-shard backend instances
+    live: Optional[LiveCorpus] = None          # created on first mutation
+
+    # ------------------------------------------------------------------
+    def ensure_live(self) -> LiveCorpus:
+        if self.live is None:
+            self.live = LiveCorpus(self.pre_exec.vectors,
+                                   self.pre_exec.cat, self.pre_exec.num)
+        return self.live
+
+    def upsert_local(
+        self,
+        vectors: np.ndarray,
+        cat: np.ndarray,
+        num: np.ndarray,
+        global_ids: np.ndarray,
+        local_ids: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Append rows to this shard's live view and extend the local ->
+        global map (``global_ids``, one per row, assigned by the sharded
+        engine's placement rule).  ``local_ids`` tombstones replaced LOCAL
+        handles first.  Returns the new local handles."""
+        live = self.ensure_live()
+        c = np.atleast_2d(np.asarray(cat))
+        m = np.atleast_2d(np.asarray(num))
+        handles = live.upsert(vectors, c, m, ids=local_ids)
+        if self.ipre_exec is not None:
+            self.ipre_exec.index.extend(c, m)
+            self.ipre_exec.cache.invalidate()
+        self.ids = np.concatenate(
+            [self.ids, np.asarray(global_ids, self.ids.dtype)]
+        )
+        return handles
+
+    def delete_local(self, local_ids: np.ndarray) -> np.ndarray:
+        """Tombstone shard-local handles; returns the newly dead ones."""
+        return self.ensure_live().delete(local_ids)
 
     def search(
         self,
@@ -288,6 +435,23 @@ class CorpusShard:
         """Run the planned executor on this shard; returns GLOBAL ids.
         ``route >= 0`` sends a post-filter row to that (backend, knob-tier)
         class of the shard's BackendSet instead of the lazy post path."""
+        if self.live is not None and self.live.dirty:
+            t0 = time.perf_counter()
+            decisions = np.array([decision], np.int32)
+            routes_arr = np.array([route], np.int32)
+            d, ids, rounds = _live_execute_grouped(
+                self.pre_exec, self.ipre_exec, self.post_exec,
+                q, [pred], k, decisions,
+                np.array([0.0 if est_selectivity is None else est_selectivity]),
+                self.live, routes=routes_arr, backend_set=self.backend_set,
+            )
+            res = SearchResult(d, ids, time.perf_counter() - t0,
+                               STRATEGY_NAMES[decision],
+                               n_expansions=int(rounds[0]))
+            if route >= 0 and decision == POST_FILTER and self.backend_set is not None:
+                res.backend, res.knob = self.backend_set.classes()[route]
+            res.ids = self._to_global(res.ids)
+            return res
         if decision == INDEXED_PRE:
             res = (self.ipre_exec or self.pre_exec).search(q, pred, k)
         elif decision == PRE_FILTER:
@@ -322,11 +486,18 @@ class CorpusShard:
         :meth:`FilteredANNEngine.batch_query`).  Returns
         ``(dists (B, k), ids (B, k) GLOBAL, expansion_rounds (B,))`` ready to
         stack across shards for one batched ``merge_topk``."""
-        out_d, out_i, rounds = _execute_grouped(
-            self.pre_exec, self.ipre_exec, self.post_exec,
-            queries, preds, k, decisions, ests,
-            routes=routes, backend_set=self.backend_set,
-        )
+        if self.live is not None and self.live.dirty:
+            out_d, out_i, rounds = _live_execute_grouped(
+                self.pre_exec, self.ipre_exec, self.post_exec,
+                queries, preds, k, decisions, ests, self.live,
+                routes=routes, backend_set=self.backend_set,
+            )
+        else:
+            out_d, out_i, rounds = _execute_grouped(
+                self.pre_exec, self.ipre_exec, self.post_exec,
+                queries, preds, k, decisions, ests,
+                routes=routes, backend_set=self.backend_set,
+            )
         return out_d, self._to_global(out_i), rounds
 
 
@@ -382,6 +553,21 @@ class FilteredANNEngine:
         self.planner = CorePlanner(seed=self.config.seed)
         self.feat = PlannerFeatures(self.dataset_stats)
         self.backend_set: Optional[BackendSet] = None   # built by build()
+        # live-corpus mutation layer: every upsert/delete flows through
+        # self.live; the estimator composes its tombstones into the exact
+        # fast path, and corpus_generation joins the plan epoch so memoised
+        # plans from a previous corpus version invalidate on lookup.
+        # (corpus_generation is engine-level and monotone ACROSS compactions
+        # — a fresh LiveCorpus restarts its own generation at 0.)
+        self.live = LiveCorpus(self.vectors, self.cat, self.num)
+        self.estimator.live = self.live
+        self.corpus_generation = 0
+        self.n_compactions = 0
+        self.compaction_policy = CompactionPolicy(
+            max_tombstone_frac=self.config.max_tombstone_frac,
+            max_segment_frac=self.config.max_segment_frac,
+            max_list_drift=self.config.max_list_drift,
+        )
         self.build_time_["stats"] = t1 - t0
         self.build_time_["attr_index"] = t2 - t1
         return self
@@ -456,12 +642,25 @@ class FilteredANNEngine:
         q = np.atleast_2d(q)
         t_m0 = time.perf_counter()
         mask = pred.eval(self.cat, self.num)
+        live = getattr(self, "live", None)
+        live_dirty = live is not None and live.dirty
+        alive_base = live.alive_mask()[: live.base_n] if live_dirty else None
+        if live_dirty:
+            # race strategies over the same live candidate set: tombstones
+            # compose into mask, ground truth, and the post path alike (the
+            # segment sits out the race — both contenders skip it equally)
+            mask = mask & alive_base
         t_mask = time.perf_counter() - t_m0
         true_sel = float(mask.mean())
         _, ti = l2_topk(q, self.vectors, k, mask)             # exact ground truth
         ti = np.asarray(ti)
-        r_pre = self.pre_exec.search(q, pred, k)
-        r_post = self.post_exec.search(q, pred, k, est_selectivity=true_sel)
+        if live_dirty:
+            r_pre = self.pre_exec.search_masked(q, mask, k)
+            r_pre.elapsed += t_mask          # charge mask eval, like search()
+        else:
+            r_pre = self.pre_exec.search(q, pred, k)
+        r_post = self.post_exec.search(q, pred, k, est_selectivity=true_sel,
+                                       alive=alive_base)
         u_pre = recall_at_k(r_pre.ids, ti) / max(r_pre.elapsed, 1e-7)
         u_post = recall_at_k(r_post.ids, ti) / max(r_post.elapsed, 1e-7)
         route, route_utils = NO_ROUTE, None
@@ -555,7 +754,150 @@ class FilteredANNEngine:
         plan_cache = getattr(self, "plan_cache", None)
         if plan_cache is not None:
             out["plan_cache"] = plan_cache.stats()
+        out["corpus_generation"] = getattr(self, "corpus_generation", 0)
+        out["n_compactions"] = getattr(self, "n_compactions", 0)
+        live = getattr(self, "live", None)
+        if live is not None:
+            out["live"] = live.stats()
         return out
+
+    # ------------------------------------------------------------------
+    # live-corpus mutations
+    # ------------------------------------------------------------------
+    def upsert(
+        self,
+        vectors: np.ndarray,
+        cat: np.ndarray,
+        num: np.ndarray,
+        ids: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Stream rows into the live corpus; returns their (stable, never
+        reused) handles.  ``ids`` replaces existing handles: old rows are
+        tombstoned, new versions appended under fresh handles.
+
+        Incremental refresh instead of rebuild: label bitmaps extend and
+        stay exact; the equi-depth range index goes stale (fails closed out
+        of ``covers()``, so range predicates demote to the scan path and
+        estimated selectivity); dataset statistics fold the delta in;
+        compiled-predicate entries invalidate (their word count is stale);
+        the plan epoch bumps so memoised plans re-plan on next lookup."""
+        v = np.atleast_2d(np.asarray(vectors, np.float32))
+        c = np.atleast_2d(np.asarray(cat))
+        m = np.atleast_2d(np.asarray(num))
+        removed_cat = removed_num = None
+        if ids is not None:
+            old = np.unique(np.asarray(ids, np.int64))
+            old = old[~self.live.is_deleted(old)]
+            if old.size:      # attrs of the rows about to be tombstoned
+                removed_cat, removed_num = self.live.row_attrs(old)
+        handles = self.live.upsert(v, c, m, ids=ids)
+        if self.attr_index is not None:
+            self.attr_index.extend(c, m)
+            self.pred_cache.invalidate()
+        self.dataset_stats.apply_delta(
+            added_cat=c, added_num=m,
+            removed_cat=removed_cat, removed_num=removed_num,
+        )
+        ivf = getattr(self, "ivf", None)
+        if ivf is not None:   # keep the drift trigger's assignments current
+            self.live.assign_new(ivf.centroids)
+        self.corpus_generation += 1
+        return handles
+
+    def delete(self, ids: np.ndarray) -> np.ndarray:
+        """Tombstone handles (idempotent); returns the newly dead ones.
+        No index structure is rewritten — the tombstone bitmap composes
+        into every candidate mask, backend call, and exact-selectivity
+        popcount at query time — but statistics fold the removal in and
+        the plan epoch bumps."""
+        fresh = self.live.delete(ids)
+        if fresh.size:
+            rc, rn = self.live.row_attrs(fresh)
+            self.dataset_stats.apply_delta(removed_cat=rc, removed_num=rn)
+        self.corpus_generation += 1
+        return fresh
+
+    def list_drift(self) -> float:
+        """IVF list-balance drift if the segment were folded in: max list
+        count (base + incrementally assigned segment rows) over the
+        build-time max.  1.0 when there is nothing to fold."""
+        ivf = getattr(self, "ivf", None)
+        live = getattr(self, "live", None)
+        if ivf is None or live is None or not live.seg_n:
+            return 1.0
+        assign = live.assign_new(ivf.centroids)
+        counts = ivf.list_counts + np.bincount(assign, minlength=ivf.n_lists)
+        return float(counts.max() / max(int(ivf.list_counts.max()), 1))
+
+    def needs_compaction(self) -> bool:
+        return self.compaction_policy.due(
+            self.live.tombstone_frac, self.live.segment_frac, self.list_drift()
+        )
+
+    def maybe_compact(self) -> Optional[np.ndarray]:
+        """Compact iff churn crossed a :class:`CompactionPolicy` threshold;
+        returns the handle -> new-position id_map, or None if not due."""
+        live = getattr(self, "live", None)
+        if live is not None and live.dirty and self.needs_compaction():
+            return self.compact()
+        return None
+
+    def compact(self) -> np.ndarray:
+        """Fold segment + tombstones into a rebuilt engine, in place.
+
+        Live rows land in handle order (monotone map), the full build
+        pipeline reruns over the folded arrays, and the trained planner /
+        estimator heads survive the rebuild (only corpus-derived state is
+        re-derived).  Generation counters bump so every cache invalidates.
+        Returns ``id_map``: old handle -> new position (-1 for dead)."""
+        t0 = time.perf_counter()
+        vectors, cat, num, id_map = self.live.compacted()
+        planner, head_version = self.planner, self.planner_version
+        est_model, est_gen = self.estimator.model, self.estimator.generation
+        gen, n_comp = self.corpus_generation, self.n_compactions
+        full = getattr(self, "pre_exec", None) is not None
+        self.vectors, self.cat, self.num = vectors, cat, num
+        if full:
+            self.build()
+        else:
+            self.build_stats()      # planning-only engines stay planning-only
+        self.planner = planner
+        self.planner_version = head_version + 1
+        self.estimator.model = est_model
+        self.estimator.generation = est_gen + 1
+        self.corpus_generation = gen + 1
+        self.n_compactions = n_comp + 1
+        self.build_time_["compaction"] = time.perf_counter() - t0
+        return id_map
+
+    def mutation_state(self) -> dict:
+        """Array-only pytree of the mutable corpus state — what
+        ``repro.ckpt.Checkpointer`` snapshots between compactions."""
+        return self.live.state_tree()
+
+    def load_mutation_state(self, tree) -> "FilteredANNEngine":
+        """Restore a :meth:`mutation_state` snapshot onto a freshly built
+        engine over the SAME base corpus.  Replays through the public
+        upsert/delete APIs, so the attribute index, statistics deltas,
+        caches, and generations all end consistent with having taken the
+        writes live."""
+        base_n = int(np.asarray(tree["base_n"]))
+        if base_n != self.live.base_n or self.live.dirty:
+            raise ValueError(
+                "load_mutation_state needs a clean engine built over the "
+                "same base corpus"
+            )
+        sv = np.asarray(tree["seg_vectors"])
+        if sv.shape[0]:
+            self.upsert(sv, np.asarray(tree["seg_cat"]),
+                        np.asarray(tree["seg_num"]))
+        from ..filter.bitmap import expand_words
+
+        tomb = np.asarray(tree["tomb"], np.uint32)
+        dead = np.nonzero(expand_words(tomb, self.live.n_total))[0]
+        if dead.size:
+            self.delete(dead)
+        return self
 
     # ------------------------------------------------------------------
     def plan(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, float]:
@@ -617,14 +959,17 @@ class FilteredANNEngine:
         rc = self.planner.route_classes
         return rc is not None and rc == expected
 
-    def _plan_epoch(self) -> Tuple[int, int, int]:
+    def _plan_epoch(self) -> Tuple[int, int, int, int]:
         """What a cached plan is valid under: the installed head
         (``planner_version``, bumped by fit/swap_planner), that head's own
-        fit generation, and the estimator's fit generation — the latter two
+        fit generation, the estimator's fit generation — the latter two
         catch direct ``eng.planner.fit()`` / ``eng.estimator.fit()`` calls
-        that retrain in place without going through the engine's hooks."""
+        that retrain in place without going through the engine's hooks —
+        and the corpus generation, which every live upsert/delete/compaction
+        bumps (mutations change exact selectivities, hence plans)."""
         return (self.planner_version, self.planner.generation,
-                self.estimator.generation)
+                self.estimator.generation,
+                getattr(self, "corpus_generation", 0))
 
     def _plan_cold(self, pred: AnyPredicate, k: int) -> Tuple[float, int, int]:
         est, exact = self.estimator.estimate_ex(pred)
@@ -761,6 +1106,22 @@ class FilteredANNEngine:
         """Plan + execute one filtered ANN query."""
         q = np.atleast_2d(q)
         est, decision, route, plan_overhead = self.plan_ex(pred, k)
+        live = getattr(self, "live", None)
+        if live is not None and live.dirty:
+            # mutated corpus: the tombstone/segment-composing executor
+            t0 = time.perf_counter()
+            decisions = np.array([decision], np.int32)
+            routes = np.array([route], np.int32)
+            d, ids, rounds = _live_execute_grouped(
+                self.pre_exec, self.ipre_exec, self.post_exec,
+                q, [pred], k, decisions, np.array([est]), live,
+                routes=routes, backend_set=self.backend_set,
+            )
+            share = time.perf_counter() - t0 + plan_overhead
+            return package_results(
+                d, ids, rounds, np.array([est]), decisions, share,
+                plan_overhead, route_names=self._route_names(decisions, routes),
+            )[0]
         if decision == INDEXED_PRE:
             res = self.ipre_exec.search(q, pred, k)
         elif decision == PRE_FILTER:
@@ -817,17 +1178,51 @@ class FilteredANNEngine:
         ests, decisions, routes, plan_overhead = self.plan_batch_ex(preds, k)
         plan_share = plan_overhead / max(b, 1)
         t0 = time.perf_counter()
-        d, ids, rounds = _execute_grouped(
-            self.pre_exec, self.ipre_exec, self.post_exec,
-            queries, preds, k, decisions, ests,
-            routes=routes, backend_set=self.backend_set,
-        )
+        live = getattr(self, "live", None)
+        if live is not None and live.dirty:
+            d, ids, rounds = _live_execute_grouped(
+                self.pre_exec, self.ipre_exec, self.post_exec,
+                queries, preds, k, decisions, ests, live,
+                routes=routes, backend_set=self.backend_set,
+            )
+        else:
+            d, ids, rounds = _execute_grouped(
+                self.pre_exec, self.ipre_exec, self.post_exec,
+                queries, preds, k, decisions, ests,
+                routes=routes, backend_set=self.backend_set,
+            )
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
         return package_results(d, ids, rounds, ests, decisions, share, plan_share,
                                route_names=self._route_names(decisions, routes))
 
     # ------------------------------------------------------------------
     def ground_truth(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> np.ndarray:
+        q = np.atleast_2d(q)
         mask = pred.eval(self.cat, self.num)
-        _, ti = l2_topk(np.atleast_2d(q), self.vectors, k, mask)
+        live = getattr(self, "live", None)
+        if live is not None and live.dirty:
+            # exact truth over the LIVE rows: tombstones compose out of the
+            # base mask, the segment scans exactly, parts merge with the
+            # same handle-order tie-break the serving path uses
+            from ..dist.collectives import merge_topk
+
+            alive = live.alive_mask()
+            mask = mask & alive[: live.base_n]
+            b = q.shape[0]
+            if mask.any():
+                bd, bi = l2_topk(q, self.vectors, k, mask)
+                bd, bi = np.asarray(bd), np.asarray(bi)
+            else:
+                bd = np.full((b, k), np.inf, np.float32)
+                bi = np.full((b, k), -1, np.int32)
+            sm = (pred.eval(live.seg_cat(), live.seg_num())
+                  & alive[live.base_n:]) if live.seg_n else np.zeros(0, bool)
+            if sm.any():
+                kk = min(k, live.seg_n)
+                sd, si = l2_topk(q, live.seg_vectors(), kk, sm)
+                sd, si = np.asarray(sd), np.asarray(si)
+                si = np.where(si >= 0, si + live.base_n, -1).astype(np.int32)
+                _, bi = merge_topk([bd, sd], [bi, si], k)
+            return bi
+        _, ti = l2_topk(q, self.vectors, k, mask)
         return np.asarray(ti)

@@ -58,6 +58,11 @@ class SelectivityEstimator:
         # anything memoising estimates (the engine's PlanCache) keys its
         # validity on this generation
         self.generation = 0
+        # Optional[repro.core.corpus.LiveCorpus], attached by the engine.
+        # When the live corpus carries tombstones, the exact fast path
+        # composes them (ANDNOT) into the popcount so "exact" stays exact
+        # over the LIVE rows, not the build-time corpus.
+        self.live = None
 
     # ------------------------------------------------------------------
     def features(self, pred: Predicate) -> np.ndarray:
@@ -125,10 +130,25 @@ class SelectivityEstimator:
     # ------------------------------------------------------------------
     def _exact_sel(self, pred) -> float:
         """Exact selectivity from the compiled bitmap's popcount; shares the
-        engine-wide predicate cache so plan-then-execute compiles once."""
-        if self.cache is not None:
-            return self.cache.get_or_compile(pred, self.index).selectivity
-        return self.index.compile(pred).selectivity
+        engine-wide predicate cache so plan-then-execute compiles once.
+
+        Under a live corpus with deletes, the stored bitmap still has
+        tombstoned rows' bits set (deletes never rewrite the index);
+        exactness is preserved by composing the tombstone words out here:
+        ``popcount(words ANDNOT tomb) / live_count``."""
+        compiled = (self.cache.get_or_compile(pred, self.index)
+                    if self.cache is not None else self.index.compile(pred))
+        live = self.live
+        if live is not None and live.n_deleted:
+            from ..filter.bitmap import popcount_words, word_andnot
+
+            tomb = live.tomb[: compiled.words.size]
+            alive = popcount_words(
+                word_andnot(compiled.words, tomb, compiled.n))
+            denom = live.live_count if compiled.n == live.n_total else max(
+                compiled.n - live.n_deleted, 1)
+            return alive / denom if denom else 0.0
+        return compiled.selectivity
 
     def _leaf_sel(self, term) -> float:
         """Marginal selectivity of one leaf (for independence corrections)."""

@@ -198,6 +198,75 @@ class DatasetStats:
         )
 
     # ------------------------------------------------------------------
+    # live-corpus incremental refresh
+    # ------------------------------------------------------------------
+    def apply_delta(
+        self,
+        added_cat: Optional[np.ndarray] = None,
+        added_num: Optional[np.ndarray] = None,
+        removed_cat: Optional[np.ndarray] = None,
+        removed_num: Optional[np.ndarray] = None,
+    ) -> "DatasetStats":
+        """Fold a mutation batch into the full-dataset statistics without a
+        rebuild: counts behind ``label_freq``/``cooc``/``hists`` add the
+        appended rows and subtract the tombstoned rows, then renormalise
+        over the new live count.
+
+        Approximation boundaries (these are planner *estimates*; exactness
+        stays the attribute index's job): codes outside the build-time
+        cardinality can't be represented in the flattened label space and
+        are dropped until a compaction rebuild widens it; histogram bin
+        edges are frozen, so values outside the build-time ``[lo, hi)``
+        adjust ``total`` but no bin; the sample-based conditional
+        histograms are left as built.
+        """
+        a_cat = len(self.cat_cards)
+        a_num = len(self.hists)
+
+        def _counts_delta(rows_cat, sign):
+            if rows_cat is None or rows_cat.shape[0] == 0:
+                return 0
+            rows_cat = np.atleast_2d(rows_cat)
+            g = np.zeros((rows_cat.shape[0], self.n_labels), np.float32)
+            for a in range(a_cat):
+                codes = rows_cat[:, a]
+                ok = (codes >= 0) & (codes < self.cat_cards[a])
+                bc = np.bincount(codes[ok], minlength=self.cat_cards[a])
+                lo = self.cat_offsets[a]
+                self._label_counts[lo:lo + self.cat_cards[a]] += sign * bc
+                g[np.nonzero(ok)[0], lo + codes[ok]] = 1.0
+            if self.n_labels:
+                self._cooc_counts += sign * (g.T @ g).astype(np.float64)
+            return rows_cat.shape[0]
+
+        def _hist_delta(rows_num, sign):
+            if rows_num is None or rows_num.shape[0] == 0:
+                return
+            rows_num = np.atleast_2d(rows_num)
+            for j in range(a_num):
+                h = self.hists[j]
+                c, _ = np.histogram(rows_num[:, j], bins=h.bins,
+                                    range=(h.lo, h.hi))
+                h.counts += sign * c
+                np.maximum(h.counts, 0.0, out=h.counts)
+                h.total = max(h.total + sign * rows_num.shape[0], 0.0)
+
+        if not hasattr(self, "_label_counts"):
+            self._label_counts = self.label_freq * self.n
+            self._cooc_counts = self.cooc * self.n
+        n_add = _counts_delta(added_cat, +1)
+        n_rem = _counts_delta(removed_cat, -1)
+        _hist_delta(added_num, +1)
+        _hist_delta(removed_num, -1)
+        self.n = max(self.n + n_add - n_rem, 0)
+        np.maximum(self._label_counts, 0.0, out=self._label_counts)
+        np.maximum(self._cooc_counts, 0.0, out=self._cooc_counts)
+        denom = max(self.n, 1)
+        self.label_freq = self._label_counts / denom
+        self.cooc = self._cooc_counts / denom
+        return self
+
+    # ------------------------------------------------------------------
     # lookups used by the estimator
     # ------------------------------------------------------------------
     def single_label_sel(self, lbl: int) -> float:

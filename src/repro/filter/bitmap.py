@@ -176,3 +176,40 @@ class BitmapLabelIndex:
     def bitmap(self, attr: int, code: int) -> np.ndarray:
         w = self._code_words[attr].get(int(code))
         return w if w is not None else empty_words(self.n)
+
+    # ------------------------------------------------------------------
+    def extend(self, cat_new: np.ndarray) -> "BitmapLabelIndex":
+        """Incrementally index appended rows (the live-corpus upsert path).
+
+        Existing per-code bitmaps are zero-padded to the grown word count
+        (appended rows don't carry old codes' bits), then the new rows'
+        bits OR in per distinct code — O(codes · N/32 + rows) per batch,
+        no rebuild.  An attribute whose distinct-code count crosses
+        :data:`MAX_CODES_INDEXED` drops to unindexed (fail closed, same as
+        at build time).  Deletes never come through here: tombstones are
+        ANDNOT-composed at query time, so stored bitmaps stay exact.
+        """
+        cat_new = np.atleast_2d(np.asarray(cat_new))
+        rows = cat_new.shape[0]
+        if rows == 0:
+            return self
+        old_n, new_n = self.n, self.n + rows
+        nw = n_words(new_n)
+        for a in range(self.n_attrs):
+            if not self._indexed[a]:
+                continue
+            d = self._code_words[a]
+            for code in d:
+                d[code] = (np.pad(d[code], (0, nw - d[code].size))
+                           if d[code].size < nw else d[code])
+            col = cat_new[:, a]
+            for code in np.unique(col):
+                ids = old_n + np.nonzero(col == code)[0]
+                add = words_from_ids(ids, new_n)
+                prev = d.get(int(code))
+                d[int(code)] = add if prev is None else word_or(prev, add)
+            if len(d) > MAX_CODES_INDEXED:
+                self._code_words[a] = {}
+                self._indexed[a] = False
+        self.n = new_n
+        return self

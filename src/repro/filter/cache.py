@@ -62,6 +62,7 @@ class PredicateCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -100,6 +101,16 @@ class PredicateCache:
             self.hits += 1
         return m
 
+    def invalidate(self) -> None:
+        """Drop every compiled entry because the CORPUS changed under them
+        (live-corpus upsert: stored words have the old row count).  Unlike
+        :meth:`clear`, the hit/miss history survives and the invalidation
+        is counted — mutation-driven churn must be observable in
+        ``stats()`` (engine telemetry asserts on it)."""
+        self._store.clear()
+        self._masks.clear()
+        self.invalidations += 1
+
     def stats(self) -> Dict[str, int]:
         return {
             "size": len(self._store),
@@ -108,6 +119,7 @@ class PredicateCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "invalidations": self.invalidations,
         }
 
     def clear(self) -> None:

@@ -78,12 +78,32 @@ class AttributeIndex:
         ranges = RangeIndex.build(num, n_buckets=range_buckets)
         return AttributeIndex(labels, ranges, max(labels.n, ranges.n))
 
+    def extend(self, cat_new: np.ndarray, num_new: np.ndarray) -> "AttributeIndex":
+        """Live-corpus refresh for appended rows: label bitmaps extend
+        incrementally (stay covered and exact over the grown corpus); the
+        equi-depth range index cannot, so its attributes go stale and drop
+        out of :meth:`covers` until compaction rebuilds them.  The caller
+        owns invalidating any compiled-predicate cache — stored bitmaps
+        compiled before the extend have the old word count."""
+        cat_new = np.atleast_2d(np.asarray(cat_new))
+        rows = cat_new.shape[0]
+        if rows == 0:
+            return self
+        self.labels.extend(cat_new)
+        if self.ranges.n_attrs:
+            self.ranges.mark_stale()
+        self.n += rows
+        return self
+
     # ------------------------------------------------------------------
     def _leaf_covered(self, leaf) -> bool:
         if isinstance(leaf, LabelEq):
             return 0 <= leaf.attr < self.labels.n_attrs and self.labels.indexed(leaf.attr)
         if isinstance(leaf, RangePred):
-            return 0 <= leaf.attr < self.ranges.n_attrs
+            # a stale (post-mutation) range attribute fails closed: the
+            # predicate demotes to the scan path + estimated selectivity
+            return (0 <= leaf.attr < self.ranges.n_attrs
+                    and self.ranges.fresh(leaf.attr))
         return False
 
     def covers(self, pred: AnyPredicate) -> bool:

@@ -42,10 +42,27 @@ class RangeIndex:
         self._vals = vals
         self._edges = edges
         self._bucket_words = bucket_words
+        # Staleness under a live corpus: sorted orders and equi-depth bucket
+        # boundaries CANNOT be extended incrementally (an appended value
+        # lands anywhere in the sorted permutation), so a mutated attribute
+        # fails CLOSED — ``fresh()`` goes False, the attribute drops out of
+        # ``AttributeIndex.covers()``, and executors fall back to the
+        # columnar scan instead of answering from pre-mutation buckets.
+        self._stale = [False] * len(orders)
 
     @property
     def n_attrs(self) -> int:
         return len(self._orders)
+
+    def fresh(self, attr: int) -> bool:
+        """False once the corpus mutated under this attribute's buckets —
+        callers must not consult the pre-mutation index for it."""
+        return not self._stale[attr]
+
+    def mark_stale(self) -> None:
+        """Invalidate every attribute (appended rows carry values for all
+        numeric columns).  A compaction rebuilds the index fresh."""
+        self._stale = [True] * len(self._orders)
 
     @staticmethod
     def build(num: np.ndarray, n_buckets: int = DEFAULT_BUCKETS) -> "RangeIndex":

@@ -7,6 +7,7 @@ from .registry import (
     DEFAULT_BACKENDS,
     BackendSet,
     KnobTier,
+    LiveIndex,
     SearchBackend,
     backend_names,
     make_backend,
@@ -24,6 +25,7 @@ __all__ = [
     "chunked_masked_topk",
     "BackendSet",
     "KnobTier",
+    "LiveIndex",
     "SearchBackend",
     "DEFAULT_BACKENDS",
     "backend_names",

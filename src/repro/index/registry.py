@@ -48,6 +48,7 @@ __all__ = [
     "KnobTier",
     "SearchBackend",
     "BackendSet",
+    "LiveIndex",
     "register_backend",
     "unregister_backend",
     "backend_names",
@@ -299,6 +300,70 @@ class AcornBackend:
             KnobTier("fast", {"ef": 64}, recall_floor=0.45),
             KnobTier("precise", {"ef": 160}, recall_floor=0.70),
         )
+
+
+class LiveIndex:
+    """Mutation-aware view over one BUILT backend: composes a
+    :class:`~repro.core.corpus.LiveCorpus`'s tombstones into every mask and
+    merges an exact scan of the append segment into the backend's base
+    results — so any registered backend serves a mutated corpus without a
+    rebuild.  Satisfies the same ``search_masked`` surface (and the same
+    conformance contract: a tombstoned id can never surface; declared
+    recall floors hold over the LIVE rows).
+
+    The segment scan uses the same fused ``l2_topk`` kernel as the exact
+    executors, keeping per-row distances bit-identical to what a fresh
+    build over the compacted corpus would compute (the PR 2 discipline) —
+    that is what makes compaction id-stable for exact tiers.
+    """
+
+    def __init__(self, base: SearchBackend, live):
+        self.base = base
+        self.live = live
+        self.name = base.name
+
+    def build(self, corpus: np.ndarray) -> "LiveIndex":
+        self.base.build(corpus)
+        return self
+
+    def search_masked(self, queries, mask, k, knobs=None):
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        live = self.live
+        base_n = live.base_n
+        alive = live.alive_mask()
+        if mask is None:
+            bmask = alive[:base_n]
+            smask = alive[base_n:]
+        else:
+            m = np.asarray(mask, bool)
+            if m.size == live.n_total:
+                bmask = m[:base_n] & alive[:base_n]
+                smask = m[base_n:] & alive[base_n:]
+            else:
+                # base-length mask: the caller predates the segment, so
+                # segment rows are filtered by liveness alone
+                bmask = m & alive[:base_n]
+                smask = alive[base_n:]
+        bd, bi = self.base.search_masked(q, bmask, k, knobs=knobs)
+        bd, bi = np.asarray(bd), np.asarray(bi)
+        if live.seg_n and smask.any():
+            from ..dist.collectives import merge_topk
+
+            kk = min(k, live.seg_n)
+            sd, si = l2_topk(q, live.seg_vectors(), kk, smask)
+            sd, si = np.asarray(sd), np.asarray(si)
+            si = np.where(si >= 0, si + base_n, -1).astype(np.int32)
+            # base part first: merge_topk's column tie-break then preserves
+            # handle order, the compaction bit-identity argument
+            bd, bi = merge_topk([bd, sd], [bi, si], k)
+        return bd, bi
+
+    def memory_bytes(self) -> int:
+        seg = self.live.seg_vectors().nbytes if self.live.seg_n else 0
+        return int(self.base.memory_bytes() + seg + self.live.tomb.nbytes)
+
+    def knob_grid(self) -> Tuple[KnobTier, ...]:
+        return self.base.knob_grid()
 
 
 # ----------------------------------------------------------------------

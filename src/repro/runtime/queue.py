@@ -53,15 +53,23 @@ SLO_TIERS: Dict[str, float] = {
 
 @dataclasses.dataclass
 class RuntimeRequest:
-    """One in-flight filtered-ANN request in the serving runtime."""
+    """One in-flight filtered-ANN request in the serving runtime.
+
+    ``op`` distinguishes reads ("query") from live-corpus writes ("upsert"
+    / "delete"); writes carry their rows in ``payload`` (upsert:
+    ``(vectors, cat, num)``; delete: ``(ids,)``) and a ``None`` query/pred.
+    One queue serves both — writes are ordinary prioritised requests, so
+    batch composition (and therefore replay) stays deterministic."""
 
     rid: int                      # unique, dense, trace order
     t_arrival: float              # virtual seconds
-    query: np.ndarray             # (d,) float32
-    pred: AnyPredicate
+    query: Optional[np.ndarray]   # (d,) float32; None for writes
+    pred: Optional[AnyPredicate]  # None for writes
     k: int
     tier: str = "standard"
     deadline: float = np.inf      # ABSOLUTE virtual time
+    op: str = "query"             # "query" | "upsert" | "delete"
+    payload: Optional[tuple] = None
 
     @property
     def priority(self):
@@ -134,6 +142,10 @@ def _assemble(
     tier_mix: Dict[str, float],
     zipf_a: float,
     rng: np.random.Generator,
+    write_frac: float = 0.0,
+    write_corpus: Optional[tuple] = None,
+    delete_pool: Optional[np.ndarray] = None,
+    upsert_frac: float = 0.5,
 ) -> List[RuntimeRequest]:
     n = arrivals.size
     # Zipf over the predicate pool: rank-r filter drawn with p ~ 1/r^a
@@ -146,10 +158,44 @@ def _assemble(
     p_tier = np.asarray([tier_mix[t] for t in tiers], np.float64)
     p_tier /= p_tier.sum()
     tier_idx = rng.choice(len(tiers), size=n, p=p_tier)
+    # interleaved writes: each slot flips write with prob write_frac, then
+    # upsert vs delete with prob upsert_frac — all from the SAME seeded rng
+    # as the read stream, so a (seed, write_frac) pair is fully replayable.
+    is_write = (rng.random(n) < write_frac) if write_frac > 0 else np.zeros(n, bool)
+    is_upsert = rng.random(n) < upsert_frac if write_frac > 0 else None
+    wv = wc = wm = None
+    if write_corpus is not None:
+        wv, wc, wm = (np.atleast_2d(np.asarray(a)) for a in write_corpus)
+    up_i = del_i = 0
     reqs = []
     for i in range(n):
-        tier = tiers[int(tier_idx[i])]
         t = float(arrivals[i])
+        if is_write[i]:
+            # upsert when rows remain (cycling), else delete; fall back to
+            # the other kind (or a plain query) when a source is missing
+            do_up = bool(is_upsert[i]) if wv is not None else False
+            if not do_up and (delete_pool is None or not len(delete_pool)):
+                do_up = wv is not None
+            if do_up:
+                j = up_i % len(wv)
+                up_i += 1
+                payload = (wv[j:j + 1], wc[j:j + 1], wm[j:j + 1])
+                op = "upsert"
+            elif delete_pool is not None and len(delete_pool):
+                did = int(delete_pool[del_i % len(delete_pool)])
+                del_i += 1
+                payload = (np.asarray([did], np.int64),)
+                op = "delete"
+            else:
+                payload, op = None, "query"
+            if op != "query":
+                reqs.append(RuntimeRequest(
+                    rid=i, t_arrival=t, query=None, pred=None, k=k,
+                    tier="batch", deadline=t + SLO_TIERS["batch"],
+                    op=op, payload=payload,
+                ))
+                continue
+        tier = tiers[int(tier_idx[i])]
         reqs.append(RuntimeRequest(
             rid=i, t_arrival=t,
             query=queries[q_idx[i]], pred=preds[pred_idx[i]], k=k,
@@ -170,13 +216,23 @@ def poisson_trace(
     tier_mix: Optional[Dict[str, float]] = None,
     zipf_a: float = 1.2,
     seed: int = 0,
+    write_frac: float = 0.0,
+    write_corpus: Optional[tuple] = None,
+    delete_pool: Optional[np.ndarray] = None,
+    upsert_frac: float = 0.5,
 ) -> ArrivalTrace:
-    """Memoryless arrivals: exponential inter-arrival gaps at ``rate`` qps."""
+    """Memoryless arrivals: exponential inter-arrival gaps at ``rate`` qps.
+
+    ``write_frac > 0`` interleaves live-corpus writes into the stream:
+    upserts draw rows (cycling) from ``write_corpus = (vectors, cat, num)``,
+    deletes cycle through ``delete_pool`` handles."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n_requests)
     arrivals = np.cumsum(gaps)
     reqs = _assemble(arrivals, queries, preds, k, tier_mix or _DEFAULT_MIX,
-                     zipf_a, rng)
+                     zipf_a, rng, write_frac=write_frac,
+                     write_corpus=write_corpus, delete_pool=delete_pool,
+                     upsert_frac=upsert_frac)
     return ArrivalTrace(reqs, "poisson", rate, seed)
 
 
@@ -192,6 +248,10 @@ def bursty_trace(
     tier_mix: Optional[Dict[str, float]] = None,
     zipf_a: float = 1.2,
     seed: int = 0,
+    write_frac: float = 0.0,
+    write_corpus: Optional[tuple] = None,
+    delete_pool: Optional[np.ndarray] = None,
+    upsert_frac: float = 0.5,
 ) -> ArrivalTrace:
     """On/off modulated Poisson with mean rate ``rate``: a fraction
     ``burst_frac`` of each ``cycle`` runs at ``burst_factor`` x the off-rate
@@ -209,7 +269,9 @@ def bursty_trace(
         t += float(rng.exponential(1.0 / r))
         arrivals[i] = t
     reqs = _assemble(arrivals, queries, preds, k, tier_mix or _DEFAULT_MIX,
-                     zipf_a, rng)
+                     zipf_a, rng, write_frac=write_frac,
+                     write_corpus=write_corpus, delete_pool=delete_pool,
+                     upsert_frac=upsert_frac)
     return ArrivalTrace(reqs, "bursty", rate, seed)
 
 

@@ -70,9 +70,19 @@ class ServiceModel:
     per_row: Dict[int, float] = dataclasses.field(default_factory=lambda: {
         PRE_FILTER: 4e-4, POST_FILTER: 3e-4, INDEXED_PRE: 1.5e-4,
     })
+    # live-corpus write costs (virtual s): per upserted/deleted row plus a
+    # flat charge when a compaction (index rebuild) triggers inside a batch
+    upsert_row: float = 2.5e-4
+    delete_row: float = 1e-4
+    compaction: float = 5e-2
 
-    def time(self, decisions) -> float:
-        return self.dispatch + float(sum(self.per_row[int(d)] for d in decisions))
+    def time(self, decisions, n_upsert_rows: int = 0, n_delete_rows: int = 0,
+             n_compactions: int = 0) -> float:
+        return (self.dispatch
+                + float(sum(self.per_row[int(d)] for d in decisions))
+                + n_upsert_rows * self.upsert_row
+                + n_delete_rows * self.delete_row
+                + n_compactions * self.compaction)
 
     def estimate(self, n_rows: int) -> float:
         """Pessimistic pre-execution estimate (decisions unknown yet) —
@@ -155,27 +165,53 @@ class OnlineRuntime:
             batch = queue.pop(cfg.max_batch)
             rids = [r.rid for r in batch]
             batches.append(rids)
-            q = np.stack([r.query for r in batch]).astype(np.float32)
-            # the trace generators emit one k per trace; grouping by k here
-            # keeps mixed-k traces correct without complicating composition
-            by_k: Dict[int, List[int]] = {}
-            for j, r in enumerate(batch):
-                by_k.setdefault(r.k, []).append(j)
-            res: List[Optional[PlannedResult]] = [None] * len(batch)
+            # writes apply BEFORE this batch's reads (rid order within the
+            # batch — deterministic), so a read flushed alongside a delete
+            # already sees the tombstone; compaction runs through the
+            # backend's own churn policy, never on a wall clock
+            writes = sorted((r for r in batch if r.op != "query"),
+                            key=lambda r: r.rid)
+            reads = [r for r in batch if r.op == "query"]
+            n_up = n_del = n_comp = 0
             w0 = time.perf_counter()
-            for k, rows in by_k.items():
-                out = self.backend.batch_query(q[rows], [batch[j].pred for j in rows], k)
-                for j, r in zip(rows, out):
-                    res[j] = r
+            for r in writes:
+                if r.op == "upsert":
+                    self.backend.upsert(*r.payload)
+                    n_up += len(r.payload[0])
+                else:
+                    self.backend.delete(*r.payload)
+                    n_del += len(r.payload[0])
+            if writes and self.backend.maybe_compact() is not None:
+                n_comp = 1
+            res: List[Optional[PlannedResult]] = [None] * len(reads)
+            if reads:
+                q = np.stack([r.query for r in reads]).astype(np.float32)
+                # the trace generators emit one k per trace; grouping by k
+                # here keeps mixed-k traces correct without complicating
+                # composition
+                by_k: Dict[int, List[int]] = {}
+                for j, r in enumerate(reads):
+                    by_k.setdefault(r.k, []).append(j)
+                for k, rows in by_k.items():
+                    out = self.backend.batch_query(
+                        q[rows], [reads[j].pred for j in rows], k)
+                    for j, r in zip(rows, out):
+                        res[j] = r
             tel.record_wall(time.perf_counter() - w0)
-            service = self.service.time([r.decision for r in res])
+            service = self.service.time(
+                [r.decision for r in res],
+                n_upsert_rows=n_up, n_delete_rows=n_del, n_compactions=n_comp,
+            )
             t_complete = now + service
             busy_until = t_complete
-            tel.record_batch(batch, res, now, t_complete, deadline_flush)
-            for r_req, r_res in zip(batch, res):
+            if writes:
+                tel.record_writes(n_up, n_del, n_comp)
+            if reads:
+                tel.record_batch(reads, res, now, t_complete, deadline_flush)
+            for r_req, r_res in zip(reads, res):
                 results[r_req.rid] = r_res
             if self.feedback is not None:
-                for r_req, r_res in zip(batch, res):
+                for r_req, r_res in zip(reads, res):
                     self.feedback.observe(r_req, r_res)
                 self.feedback.maybe_refit()
         return RuntimeReport(results, batches, tel)

@@ -57,6 +57,11 @@ class Telemetry:
         self._queue_wait: List[float] = []       # virtual arrival -> flush
         self._fill: List[float] = []             # recall proxy: k-slots filled
         self._expansions: List[int] = []         # post-filter effort
+        # live-corpus write ledger (deterministic: counts derive from the
+        # trace composition, compactions from the backend's churn policy)
+        self.n_upserts = 0
+        self.n_deletes = 0
+        self.n_compactions = 0
         self.wall_exec_s = 0.0                   # measured (NOT deterministic)
 
     # ------------------------------------------------------------------
@@ -88,6 +93,13 @@ class Telemetry:
     def record_wall(self, seconds: float) -> None:
         self.wall_exec_s += seconds
 
+    def record_writes(self, n_upsert_rows: int, n_delete_rows: int,
+                      n_compactions: int = 0) -> None:
+        """Row counts from one batch's applied writes (virtual ledger)."""
+        self.n_upserts += n_upsert_rows
+        self.n_deletes += n_delete_rows
+        self.n_compactions += n_compactions
+
     # ------------------------------------------------------------------
     def counters(self) -> Dict:
         """The deterministic ledger only (what replay tests compare)."""
@@ -100,6 +112,9 @@ class Telemetry:
             "deadline_met": dict(sorted(self.deadline_met.items())),
             "deadline_missed": dict(sorted(self.deadline_missed.items())),
             "deadline_flushes": self.deadline_flushes,
+            "n_upserts": self.n_upserts,
+            "n_deletes": self.n_deletes,
+            "n_compactions": self.n_compactions,
             "fill_rate": round(float(np.mean(self._fill)) if self._fill else 0.0, 6),
             "mean_expansions": round(
                 float(np.mean(self._expansions)) if self._expansions else 0.0, 6

@@ -145,7 +145,91 @@ class ShardedANNEngine:
                  n_lists: Optional[int] = None):
         self.engine = engine
         self.n_shards = n_shards or max(1, len(jax.devices()))
+        self._n_lists = n_lists
         self.shards = engine.shard_corpus(self.n_shards, n_lists=n_lists)
+        self._build_locators()
+
+    # ------------------------------------------------------------------
+    def _build_locators(self) -> None:
+        """Global handle -> (owning shard, shard-local handle).  Positions
+        within ``shard.ids`` ARE the local handles (``upsert_local`` appends
+        to both arrays in lockstep and deletes never remove entries), so the
+        locator is just the inverse of the per-shard id lists."""
+        n_total = self.engine.live.n_total
+        self._loc_shard = np.full(n_total, -1, np.int32)
+        self._loc_pos = np.full(n_total, -1, np.int64)
+        for si, s in enumerate(self.shards):
+            self._loc_shard[s.ids] = si
+            self._loc_pos[s.ids] = np.arange(len(s.ids), dtype=np.int64)
+
+    def _grow_locators(self, n_total: int) -> None:
+        pad = n_total - len(self._loc_shard)
+        if pad > 0:
+            self._loc_shard = np.concatenate(
+                [self._loc_shard, np.full(pad, -1, np.int32)])
+            self._loc_pos = np.concatenate(
+                [self._loc_pos, np.full(pad, -1, np.int64)])
+
+    def _delete_on_shards(self, gids: np.ndarray) -> None:
+        gids = np.asarray(gids, np.int64).ravel()
+        gids = gids[(gids >= 0) & (gids < len(self._loc_shard))]
+        for si, s in enumerate(self.shards):
+            sel = gids[self._loc_shard[gids] == si]
+            if sel.size:
+                s.delete_local(self._loc_pos[sel])
+
+    # ------------------------------------------------------------------
+    def upsert(self, vectors: np.ndarray, cat: np.ndarray,
+               num: np.ndarray, ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Insert (or replace, when ``ids`` is given) rows: the central
+        engine assigns global handles and updates planning state; each new
+        row is then placed on a shard (``handle % n_shards``) so shard-local
+        search sees it immediately.  Returns the global handles."""
+        v = np.atleast_2d(np.asarray(vectors, np.float32))
+        c = np.atleast_2d(np.asarray(cat))
+        m = np.atleast_2d(np.asarray(num))
+        gids = self.engine.upsert(v, c, m, ids=ids)
+        if ids is not None:
+            # the central engine already tombstoned the replaced handles;
+            # propagate to whichever shards own them (idempotent bit-set)
+            self._delete_on_shards(np.asarray(ids))
+        self._grow_locators(self.engine.live.n_total)
+        owner = (gids % len(self.shards)).astype(np.int32)
+        for si, s in enumerate(self.shards):
+            rows = np.nonzero(owner == si)[0]
+            if not rows.size:
+                continue
+            lh = s.upsert_local(v[rows], c[rows], m[rows],
+                                global_ids=gids[rows])
+            self._loc_shard[gids[rows]] = si
+            self._loc_pos[gids[rows]] = lh
+        return gids
+
+    def delete(self, ids: np.ndarray) -> np.ndarray:
+        """Tombstone global handles centrally AND on their owning shards;
+        returns the handles that were newly deleted."""
+        fresh = self.engine.delete(ids)
+        self._delete_on_shards(fresh)
+        return fresh
+
+    def needs_compaction(self) -> bool:
+        return self.engine.needs_compaction()
+
+    def compact(self) -> np.ndarray:
+        """Fold segment + tombstones into a rebuilt central engine, then
+        re-shard the compacted corpus (old shard objects are dropped whole —
+        per-shard live state is baked into the new partitions).  Returns the
+        old-handle -> new-position ``id_map``."""
+        id_map = self.engine.compact()
+        self.shards = self.engine.shard_corpus(self.n_shards,
+                                               n_lists=self._n_lists)
+        self._build_locators()
+        return id_map
+
+    def maybe_compact(self) -> Optional[np.ndarray]:
+        if self.engine.live.dirty and self.needs_compaction():
+            return self.compact()
+        return None
 
     # ------------------------------------------------------------------
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
@@ -209,7 +293,8 @@ class ShardedANNEngine:
         cache) plus the per-shard predicate caches aggregated — each shard
         compiles its own bitmaps, so hit rates are summed across shards."""
         out = self.engine.stats()
-        agg = {"hits": 0, "misses": 0, "evictions": 0, "size": 0}
+        agg = {"hits": 0, "misses": 0, "evictions": 0, "size": 0,
+               "invalidations": 0}
         n_caches = 0
         for s in self.shards:
             cache = getattr(s.ipre_exec, "cache", None) if s.ipre_exec else None

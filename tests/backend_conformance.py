@@ -289,3 +289,107 @@ def test_backendset_memory_and_pq_reduction(built):
         f"ivfpq memory {mem_pq} not >=4x smaller than flat {mem_flat}"
     )
     assert built["ivfpq"].rerank_bytes > 0  # re-rank cost is declared, not hidden
+
+
+# ----------------------------------------------------------------------
+# 6. mutate-then-search: every backend serves a live corpus via LiveIndex
+# ----------------------------------------------------------------------
+def _live_over(x):
+    from repro.core import LiveCorpus
+
+    n = len(x)
+    return LiveCorpus(x, np.zeros((n, 1), np.int32), np.zeros((n, 1), np.float32))
+
+
+def _wrap_attrs(rows):
+    b = len(np.atleast_2d(rows))
+    return np.zeros((b, 1), np.int32), np.zeros((b, 1), np.float32)
+
+
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_mutate_delete_excludes_tombstones(built, corpus, name):
+    """After deleting the oracle's own top hits, no tier at any knob may
+    ever surface a tombstoned id — fail-closed is the contract, recall is
+    measured against the LIVE oracle."""
+    from repro.index import LiveIndex
+
+    x, q, mask = corpus
+    live = _live_over(x)
+    b = LiveIndex(built[name], live)
+    _, truth = _oracle(x, q, mask)
+    dead = np.unique(truth[truth >= 0])[:40]
+    live.delete(dead)
+    live_mask = mask.copy()
+    live_mask[dead] = False
+    _, live_truth = _oracle(x, q, live_mask)
+    for tier in b.knob_grid():
+        _, ids = b.search_masked(q, mask, K, knobs=tier.knobs)
+        valid = ids[ids >= 0]
+        assert not np.isin(valid, dead).any(), (
+            f"{name}:{tier.name} surfaced a tombstoned id"
+        )
+        assert mask[valid].all()
+        r = _recall(ids, live_truth)
+        assert r >= tier.recall_floor, (
+            f"{name}:{tier.name} live recall {r:.3f} < {tier.recall_floor}"
+        )
+
+
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_mutate_upsert_returns_new_ids(built, corpus, name):
+    """A just-upserted row at distance zero from its query must surface at
+    every tier: the append segment is exact-scanned regardless of how
+    approximate the base backend is."""
+    from repro.index import LiveIndex
+
+    x, q, _ = corpus
+    live = _live_over(x)
+    b = LiveIndex(built[name], live)
+    c, m = _wrap_attrs(q[:4])
+    handles = live.upsert(q[:4], c, m)
+    for tier in b.knob_grid():
+        d, ids = b.search_masked(q[:4], None, K, knobs=tier.knobs)
+        for j in range(4):
+            assert handles[j] in ids[j], (
+                f"{name}:{tier.name} missed the fresh upsert (row {j})"
+            )
+
+
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_mutate_compaction_id_stable(built, corpus, name):
+    """Compaction folds segment + tombstones into a rebuilt corpus.  Exact
+    tiers must be BIT-identical between the live view (translated through
+    ``id_map``) and a fresh build over the compacted corpus; approximate
+    tiers must clear their declared floor against the compacted oracle."""
+    from repro.index import LiveIndex
+
+    x, q, mask = corpus
+    live = _live_over(x)
+    b = LiveIndex(built[name], live)
+    rng = np.random.default_rng(11)
+    dead = rng.choice(len(x), 60, replace=False)
+    live.delete(dead)
+    new_rows = (q[:6] + 0.01 * rng.normal(0, 1, (6, x.shape[1]))).astype(np.float32)
+    c, m = _wrap_attrs(new_rows)
+    live.upsert(new_rows, c, m)
+    # mask over the live handle space: base rows keep theirs, segment passes
+    lm = np.concatenate([mask, np.ones(live.seg_n, bool)])
+    cv, _, _, id_map = live.compacted()
+    alive_h = np.nonzero(id_map >= 0)[0]
+    fm = np.zeros(len(cv), bool)
+    fm[id_map[alive_h]] = lm[alive_h]
+    fresh = make_backend(name, cv, seed=0)
+    _, ctruth = _oracle(cv, q, fm)
+    for tier in b.knob_grid():
+        ld, li = b.search_masked(q, lm, K, knobs=tier.knobs)
+        tr = np.where(li >= 0, id_map[np.maximum(li, 0)], -1).astype(np.int32)
+        if tier.recall_floor >= 0.99:
+            fd, fi = fresh.search_masked(q, fm, K, knobs=tier.knobs)
+            np.testing.assert_array_equal(tr, fi, err_msg=f"{name}:{tier.name}")
+            np.testing.assert_allclose(ld, fd, rtol=1e-5, atol=1e-5)
+        else:
+            r = _recall(tr, ctruth)
+            assert r >= tier.recall_floor, (
+                f"{name}:{tier.name} post-compaction recall {r:.3f} "
+                f"< {tier.recall_floor}"
+            )

@@ -1,0 +1,370 @@
+"""Live-corpus mutation layer: upserts, deletes, tombstone-aware planning,
+compaction, and the cross-layer invariants ISSUE 7 promises.
+
+The headline invariant: for EXACT plans, a mutated engine must return ids
+identical (modulo the compaction ``id_map`` translation) to an engine
+freshly built from the equivalent post-mutation corpus — tombstones and the
+append segment are a pure view change, never an accuracy change.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompactionPolicy,
+    EngineConfig,
+    FilteredANNEngine,
+    LabelEq,
+    LiveCorpus,
+    Predicate,
+    RangePred,
+)
+
+K = 10
+
+
+# ----------------------------------------------------------------------
+# fixtures
+# ----------------------------------------------------------------------
+def _make_corpus(n=2500, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((n, d)).astype(np.float32)
+    cat = rng.integers(0, 5, (n, 2)).astype(np.int32)
+    num = rng.standard_normal((n, 2)).astype(np.float32)
+    return v, cat, num
+
+
+def _build(v, cat, num, **cfg):
+    return FilteredANNEngine(v, cat, num, EngineConfig(seed=0, **cfg)).build()
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return _make_corpus()
+
+
+PRED = Predicate(labels=(LabelEq(0, 2), LabelEq(1, 3)))
+PRED_LABEL = Predicate(labels=(LabelEq(0, 1),))
+PRED_RANGE = Predicate(ranges=(RangePred(0, ((-0.5, 0.5),)),))
+
+
+def _mutate(eng, v, cat, seed=3):
+    """A standard churn burst: delete matching + random rows, upsert a few
+    rows matching PRED (two of them duplicating existing vectors)."""
+    rng = np.random.default_rng(seed)
+    match = np.nonzero((cat[:, 0] == 2) & (cat[:, 1] == 3))[0][:15]
+    rand = rng.choice(len(v), 40, replace=False)
+    eng.delete(np.concatenate([match, rand]))
+    nv = np.concatenate([v[:2], rng.standard_normal((4, v.shape[1])).astype(np.float32)])
+    nc = np.tile(np.array([[2, 3]], np.int32), (6, 1))
+    nm = np.zeros((6, 2), np.float32)
+    return eng.upsert(nv, nc, nm)
+
+
+# ----------------------------------------------------------------------
+# tentpole: post-mutation equivalence
+# ----------------------------------------------------------------------
+def test_exact_plan_bit_equality_vs_fresh_build(corpus):
+    """Mutated engine == fresh build over the post-mutation corpus, for
+    exact plans: ground truth AND the served exact-strategy ids translate
+    bit-identically through the compaction id_map."""
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    handles = _mutate(eng, v, cat)
+    q = v[:8]
+    gt_live = eng.ground_truth(q, PRED, k=K)
+    res = eng.batch_query(q, [PRED] * len(q), k=K)
+    for i, pr in enumerate(res):
+        if pr.result.backend in (None, "flat"):  # exact execution classes
+            np.testing.assert_array_equal(pr.result.ids[0], gt_live[i])
+
+    cv, cc, cm, id_map = eng.live.compacted()
+    fresh = _build(cv, cc, cm)
+    gt_fresh = fresh.ground_truth(q, PRED, k=K)
+    tr = np.where(gt_live >= 0, id_map[np.maximum(gt_live, 0)], -1)
+    np.testing.assert_array_equal(tr, gt_fresh)
+    # a surviving upsert handle translates to a real row in the fresh corpus
+    assert (id_map[handles] >= 0).all()
+
+
+def test_compact_preserves_results_and_restores_planner(corpus):
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    _mutate(eng, v, cat)
+    q = v[:6]
+    gt_before = eng.ground_truth(q, PRED, k=K)
+    gen_before = eng.corpus_generation
+    id_map = eng.compact()
+    assert eng.n_compactions == 1
+    assert eng.corpus_generation == gen_before + 1  # monotone ACROSS compaction
+    assert not eng.live.dirty
+    gt_after = eng.ground_truth(q, PRED, k=K)
+    tr = np.where(gt_before >= 0, id_map[np.maximum(gt_before, 0)], -1)
+    np.testing.assert_array_equal(tr, gt_after)
+    # the rebuilt engine serves immediately
+    r = eng.query(q[0], PRED, k=K)
+    assert (r.result.ids >= -1).all()
+    assert "compaction" in eng.build_time_
+
+
+def test_delete_excludes_tombstones_every_plan(corpus):
+    """No strategy may surface a deleted id, including routed backends."""
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    match = np.nonzero(cat[:, 0] == 2)[0][:60]
+    eng.delete(match)
+    dead = set(match.tolist())
+    for pred in (PRED, PRED_LABEL, Predicate(labels=(LabelEq(0, 2),))):
+        res = eng.batch_query(v[:6], [pred] * 6, k=K)
+        for pr in res:
+            ids = pr.result.ids[0]
+            assert not (set(ids[ids >= 0].tolist()) & dead), (
+                f"{pr.result.strategy}/{pr.result.backend} leaked a tombstone"
+            )
+
+
+def test_upsert_of_existing_id_replaces(corpus):
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    # replace row 7 with a PRED-matching copy of itself
+    h = eng.upsert(v[7:8], np.array([[2, 3]], np.int32), np.zeros((1, 2), np.float32),
+                   ids=np.array([7]))
+    assert eng.live.is_deleted(np.array([7]))[0]
+    gt = eng.ground_truth(v[7], PRED, k=K)
+    assert h[0] in gt[0] and 7 not in gt[0]
+
+
+# ----------------------------------------------------------------------
+# staleness-aware statistics (satellite 6 + sel demotion)
+# ----------------------------------------------------------------------
+def test_sel_is_exact_demotes_and_recovers(corpus):
+    """Range buckets go stale on upsert (fail closed: covers() drops, the
+    estimate demotes to non-exact); label bitmaps extend incrementally and
+    STAY exact; compaction rebuilds everything back to exact."""
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    assert eng.attr_index.covers(PRED_RANGE)
+    _, exact0 = eng.estimator.estimate_ex(PRED_RANGE)
+    assert exact0
+    _mutate(eng, v, cat)
+    # stale range index: fail closed out of the covered set
+    assert not eng.attr_index.covers(PRED_RANGE)
+    _, exact1 = eng.estimator.estimate_ex(PRED_RANGE)
+    assert not exact1
+    # label bitmaps extended in place: still exact, and exact over LIVE rows
+    s, exact2 = eng.estimator.estimate_ex(PRED_LABEL)
+    assert exact2
+    alive = eng.live.alive_mask()
+    m = np.concatenate([cat[:, 0] == 1, eng.live.seg_cat()[:, 0] == 1]) & alive
+    assert s == pytest.approx(m.sum() / alive.sum())
+    eng.compact()
+    assert eng.attr_index.covers(PRED_RANGE)
+    _, exact3 = eng.estimator.estimate_ex(PRED_RANGE)
+    assert exact3
+
+
+def test_stale_range_boundary_regression(corpus):
+    """The boundary case: a range predicate whose matching rows are ONLY in
+    the append segment.  A stale bucket bitmap would return zero matches if
+    it still claimed coverage; fail-closed scanning must find them."""
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    # upsert rows with a numeric value far outside the built histogram
+    nv = np.random.default_rng(5).standard_normal((3, v.shape[1])).astype(np.float32)
+    nm = np.full((3, 2), 99.0, np.float32)
+    h = eng.upsert(nv, np.zeros((3, 2), np.int32), nm)
+    far = Predicate(ranges=(RangePred(0, ((98.0, 100.0),)),))
+    assert not eng.attr_index.covers(far)      # stale -> out of covered set
+    gt = eng.ground_truth(nv[0], far, k=K)
+    got = set(gt[0][gt[0] >= 0].tolist())
+    assert got == set(h.tolist())
+    r = eng.query(nv[0], far, k=K)
+    ids = r.result.ids[0]
+    assert set(ids[ids >= 0].tolist()) == set(h.tolist())
+
+
+# ----------------------------------------------------------------------
+# satellite 1: cache invalidation / epoch counters in stats()
+# ----------------------------------------------------------------------
+def test_stats_exposes_invalidation_counters(corpus):
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    eng.query(v[0], PRED, k=K)
+    st0 = eng.stats()
+    assert st0["corpus_generation"] == 0
+    assert st0["plan_cache"]["invalidations"] == 0
+
+    eng.upsert(v[:1], np.array([[2, 3]], np.int32), np.zeros((1, 2), np.float32))
+    eng.query(v[0], PRED, k=K)    # same pred: plan epoch mismatch on lookup
+    st1 = eng.stats()
+    assert st1["corpus_generation"] == 1
+    assert st1["plan_cache"]["invalidations"] >= 1
+    assert st1["pred_cache"]["invalidations"] >= 1   # upsert rewrites words
+    assert st1["live"]["dirty"]
+
+    # deletes keep compiled words valid: tombstones compose at query time
+    pred_inval = st1["pred_cache"]["invalidations"]
+    eng.delete(np.array([3]))
+    assert eng.stats()["pred_cache"]["invalidations"] == pred_inval
+    assert eng.stats()["corpus_generation"] == 2
+
+
+# ----------------------------------------------------------------------
+# satellite 2: merge under shards whose live count drops below k
+# ----------------------------------------------------------------------
+def test_merge_tolerates_starved_shard():
+    from repro.dist.collectives import merge_topk
+
+    # shard A has only 3 survivors, shard B a full k
+    da = np.array([[0.1, 0.5, 0.9, np.inf, np.inf]], np.float32)
+    ia = np.array([[4, 9, 2, -1, -1]], np.int32)
+    db = np.array([[0.2, 0.3, 0.6, 0.7, 1.1]], np.float32)
+    ib = np.array([[10, 11, 12, 13, 14]], np.int32)
+    d, i = merge_topk(np.stack([da, db]), np.stack([ia, ib]), 5)
+    np.testing.assert_array_equal(i[0], [4, 10, 11, 9, 12])
+    # fewer total survivors than k: -1/inf padding, no garbage
+    d, i = merge_topk(np.stack([da[:, :2], da[:, 3:]]),
+                      np.stack([ia[:, :2], ia[:, 3:]]), 5)
+    np.testing.assert_array_equal(i[0], [4, 9, -1, -1, -1])
+    assert np.isinf(d[0][2:]).all()
+
+
+def test_sharded_starved_shard_after_deletes(corpus):
+    """Delete every PRED match on one shard; the sharded engine must still
+    merge exactly (padded rows never poison the merge)."""
+    from repro.serve.engine import ShardedANNEngine
+
+    v, cat, num = corpus
+    flat = _build(v, cat, num)
+    sharded = ShardedANNEngine(_build(v, cat, num), n_shards=3)
+    match = np.nonzero((cat[:, 0] == 2) & (cat[:, 1] == 3))[0]
+    shard0 = sharded.shards[0].ids
+    kill = match[np.isin(match, shard0)]
+    flat.delete(kill)
+    sharded.delete(kill)
+    gt = flat.ground_truth(v[:5], PRED, k=K)
+    res = sharded.batch_query(v[:5], [PRED] * 5, k=K)
+    for i, pr in enumerate(res):
+        if pr.result.backend in (None, "flat"):
+            ids = pr.result.ids[0]
+            np.testing.assert_array_equal(np.sort(ids), np.sort(gt[i]))
+            assert not np.isin(ids[ids >= 0], kill).any()
+
+
+def test_sharded_equals_flat_after_churn(corpus):
+    from repro.serve.engine import ShardedANNEngine
+
+    v, cat, num = corpus
+    flat = _build(v, cat, num)
+    base = _build(v, cat, num)
+    sharded = ShardedANNEngine(base, n_shards=3)
+    rng = np.random.default_rng(7)
+    dead = rng.choice(len(v), 30, replace=False)
+    flat.delete(dead)
+    sharded.delete(dead)
+    nv = rng.standard_normal((5, v.shape[1])).astype(np.float32)
+    nc = np.tile(np.array([[2, 3]], np.int32), (5, 1))
+    nm = np.zeros((5, 2), np.float32)
+    hf = flat.upsert(nv, nc, nm)
+    hs = sharded.upsert(nv, nc, nm)
+    np.testing.assert_array_equal(hf, hs)
+    gt = flat.ground_truth(v[:6], PRED, k=K)
+    res = sharded.batch_query(v[:6], [PRED] * 6, k=K)
+    for i, pr in enumerate(res):
+        if pr.result.backend in (None, "flat"):
+            np.testing.assert_array_equal(np.sort(pr.result.ids[0]), np.sort(gt[i]))
+    # compaction re-shards; results keep translating through id_map
+    id_map = sharded.compact()
+    gt2 = sharded.engine.ground_truth(v[:6], PRED, k=K)
+    tr = np.where(gt >= 0, id_map[np.maximum(gt, 0)], -1)
+    np.testing.assert_array_equal(tr, gt2)
+
+
+# ----------------------------------------------------------------------
+# compaction policy
+# ----------------------------------------------------------------------
+def test_compaction_policy_thresholds():
+    pol = CompactionPolicy(max_tombstone_frac=0.2, max_segment_frac=0.3,
+                           max_list_drift=1.5)
+    assert not pol.due(0.1, 0.1, 1.0)
+    assert pol.due(0.25, 0.0, 1.0)
+    assert pol.due(0.0, 0.35, 1.0)
+    assert pol.due(0.0, 0.0, 2.0)
+
+
+def test_maybe_compact_triggers_on_churn(corpus):
+    v, cat, num = corpus
+    eng = _build(v, cat, num, max_tombstone_frac=0.01)
+    assert eng.maybe_compact() is None           # clean corpus: no-op
+    eng.delete(np.arange(100))
+    assert eng.needs_compaction()
+    id_map = eng.maybe_compact()
+    assert id_map is not None and eng.n_compactions == 1
+    assert (id_map[:100] == -1).all()
+
+
+# ----------------------------------------------------------------------
+# runtime: interleaved writes, replay determinism
+# ----------------------------------------------------------------------
+def test_runtime_write_trace_replays_deterministically(corpus):
+    from repro.runtime import OnlineRuntime
+    from repro.runtime.queue import poisson_trace
+    from repro.runtime.scheduler import SchedulerConfig
+
+    v, cat, num = corpus
+    preds = [Predicate(labels=(LabelEq(0, c),)) for c in range(4)]
+    rng = np.random.default_rng(8)
+    wv = rng.standard_normal((30, v.shape[1])).astype(np.float32)
+    wc = rng.integers(0, 4, (30, 2)).astype(np.int32)
+    wm = rng.standard_normal((30, 2)).astype(np.float32)
+    trace = poisson_trace(v[:40], preds, 150, rate=600.0, seed=4,
+                          write_frac=0.25, write_corpus=(wv, wc, wm),
+                          delete_pool=np.arange(0, 300, 5))
+    ops = [r.op for r in trace]
+    assert "upsert" in ops and "delete" in ops and "query" in ops
+
+    reports = []
+    for _ in range(2):
+        eng = _build(v, cat, num)
+        rt = OnlineRuntime(eng, SchedulerConfig(max_batch=16))
+        reports.append(rt.run_trace(trace))
+    a, b = reports
+    assert a.telemetry.counters() == b.telemetry.counters()
+    assert a.batches == b.batches
+    for rid in a.results:
+        np.testing.assert_array_equal(a.ids(rid), b.ids(rid))
+    c = a.telemetry.counters()
+    assert c["n_upserts"] == ops.count("upsert")
+    assert c["n_deletes"] == ops.count("delete")
+    assert c["n_completed"] == ops.count("query")
+    # writes cost virtual time through the service model
+    from repro.runtime.scheduler import ServiceModel
+
+    sm = ServiceModel()
+    assert sm.time([], n_upsert_rows=2, n_delete_rows=1, n_compactions=1) == (
+        pytest.approx(sm.dispatch + 2 * sm.upsert_row + sm.delete_row + sm.compaction)
+    )
+
+
+# ----------------------------------------------------------------------
+# checkpoint: mutable state snapshot/restore
+# ----------------------------------------------------------------------
+def test_checkpoint_mutation_state_roundtrip(corpus, tmp_path):
+    from repro.ckpt import Checkpointer
+
+    v, cat, num = corpus
+    eng = _build(v, cat, num)
+    _mutate(eng, v, cat)
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(1, eng.mutation_state(),
+            meta={"corpus_generation": eng.corpus_generation})
+    assert ck.read_meta(1) == {"corpus_generation": eng.corpus_generation}
+
+    restored = ck.restore(1, eng.mutation_state())
+    eng2 = _build(v, cat, num)
+    eng2.load_mutation_state(
+        {k: np.asarray(val) for k, val in restored.items()})
+    assert eng2.live.n_total == eng.live.n_total
+    assert eng2.live.live_count == eng.live.live_count
+    gt_a = eng.ground_truth(v[:4], PRED, k=K)
+    gt_b = eng2.ground_truth(v[:4], PRED, k=K)
+    np.testing.assert_array_equal(gt_a, gt_b)
