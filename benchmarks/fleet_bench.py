@@ -1,0 +1,266 @@
+"""Multi-tenant fleet benchmark: noisy neighbor vs fair-share + admission.
+
+The "millions of users" acceptance story (ROADMAP open item 1), written
+to ``BENCH_fleet.json`` at the repo root:
+
+1. **Noisy-neighbor isolation** — a fleet of tenants (quiet poisson
+   traffic + one bursty tenant offered >= 8x its fair load) replays the
+   SAME multi-tenant trace through two schedulers:
+
+   * ``shared``  — the no-isolation baseline: one global
+     deadline-sorted queue, no admission, no autoscaling.  The noisy
+     tenant saturates the serial server and the quiet tenants' SLO
+     hit-rate collapses.
+   * ``fleet``   — deficit-round-robin fair share + per-tenant
+     token-bucket admission + elastic autoscaling.  Quiet tenants must
+     hold SLO hit-rate >= 0.95.
+
+2. **Elasticity** — the autoscaler must emit at least one grow and one
+   shrink event during the fleet run (idle tenants release capacity,
+   the overloaded tenant borrows it through ``replan_mesh``).
+
+3. **Replay determinism** — the fleet run executes TWICE; per-tenant
+   batch compositions, result ids, and telemetry counters must be
+   bit-identical.
+
+Scale: ``REPRO_BENCH_SCALE`` rows are split evenly across the tenants
+(the 100k headline = a 100k-row fleet).  Load levels derive from the
+virtual cost model, so the SLO dynamics are scale-invariant; wall-clock
+throughput is measured on the real engines.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench              # 100k fleet
+    REPRO_BENCH_SCALE=5000 PYTHONPATH=src python -m benchmarks.fleet_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DATASET = "arxiv"
+K = 10
+BATCH = 64
+NOISY_FACTOR = 8.0       # noisy tenant offered load vs its fair share
+QUIET_TARGET = 0.95      # acceptance: quiet SLO hit-rate under fleet mode
+SHARED_CEIL = 0.60       # acceptance: quiet SLO hit-rate under shared queue
+
+
+def _tenant_specs(scale_n: int):
+    """(name, tier_mix, kind, rate_frac_of_fair, duration_s) per tenant —
+    2 tenants at smoke scales (<= 10k rows), 3 at the headline.  Request
+    counts derive from rate x duration so every trace spans several burst
+    cycles regardless of scale."""
+    small = scale_n <= 10_000
+    quiet_mix = {"standard": 0.9, "batch": 0.1}
+    noisy_mix = {"standard": 1.0}
+    tenants = [("checkout", quiet_mix, "poisson", 0.3, 0.30)]
+    if not small:
+        tenants.append(("catalog", quiet_mix, "poisson", 0.3, 0.30))
+    tenants.append(("analytics", noisy_mix, "bursty", NOISY_FACTOR, 0.15))
+    return tenants
+
+
+def _per_tenant_batches(report, trace):
+    tenant_of = {r.rid: r.tenant for r in trace}
+    return [[(tenant_of[rid], rid) for rid in b] for b in report.batches]
+
+
+def _ids_digest(report):
+    import hashlib
+
+    h = hashlib.sha256()
+    for rid in sorted(report.results):
+        h.update(np.ascontiguousarray(report.ids(rid)).tobytes())
+    return h.hexdigest()
+
+
+def main():
+    from repro.core import EngineConfig
+    from repro.core.trainer import gen_queries
+    from repro.data import make_dataset
+    from repro.fleet import (
+        AdmissionController,
+        AutoscaleConfig,
+        CollectionSchema,
+        Fleet,
+        FleetConfig,
+        FleetRuntime,
+        FleetServiceModel,
+    )
+    from repro.runtime import TenantTraceSpec, multi_tenant_trace
+
+    from .common import corpus_n
+
+    n_fleet = corpus_n()
+    tenants = _tenant_specs(n_fleet)
+    n_each = n_fleet // len(tenants)
+    print(f"fleet_bench: {DATASET} fleet_rows={n_fleet} "
+          f"tenants={[t[0] for t in tenants]} rows_each={n_each}")
+
+    # BEST-CASE capacity of the serial server (rows/s, virtual): full
+    # batches of the cheapest plan on a 2-shard tenant.  Anchoring fair
+    # share on the optimistic bound means "8x fair" genuinely overloads
+    # the server no matter which plans the planner actually picks.
+    svc = FleetServiceModel()
+    best_batch_s = (svc.dispatch + BATCH * min(svc.per_row.values()) / 2
+                    + svc.fanout * 2)
+    capacity = BATCH / best_batch_s
+    fair = capacity / len(tenants)
+    print(f"  virtual capacity ~{capacity:.0f} rows/s, "
+          f"fair share ~{fair:.0f} rows/s per tenant")
+
+    fleet = Fleet(total_shards=8)
+    specs = []
+    for ti, (name, mix, kind, rate_frac, duration) in enumerate(tenants):
+        ds = make_dataset(DATASET, scale=str(n_each), seed=ti)
+        qs, preds, _ = gen_queries(
+            ds.vectors, ds.cat, ds.num, 24, kinds=ds.filter_kinds,
+            sel_range=(0.02, 0.3), seed=ti + 1,
+        )
+        noisy = kind == "bursty"
+        rate = rate_frac * fair
+        n_req = int(rate * duration)
+        schema = CollectionSchema(
+            name=name, dim=ds.vectors.shape[1],
+            slo_tier="standard", weight=1.0,
+            # the noisy tenant starts at 1 shard and must BORROW capacity
+            # through the autoscaler; its admission budget is well under
+            # its fair share, with a small burst allowance — everything
+            # above is shed deterministically at arrival
+            n_shards=1 if noisy else 2,
+            admit_rate=0.6 * fair if noisy else None,
+            admit_burst=0.3 * fair if noisy else None,
+        )
+        fleet.create(schema, ds.vectors, ds.cat, ds.num,
+                     config=EngineConfig(seed=0))
+        specs.append(TenantTraceSpec(
+            name, qs, list(preds), n_req, rate, kind=kind, k=K,
+            tier_mix=mix, burst_factor=8.0, burst_frac=0.25, cycle=0.05,
+        ))
+        print(f"  {name}: {n_each} rows, {kind} @ {rate:.0f} qps "
+              f"({rate_frac:.1f}x fair, {n_req} reqs)")
+
+    trace = multi_tenant_trace(specs, seed=42)
+    quiet_names = [t[0] for t in tenants if t[2] == "poisson"]
+    noisy_name = [t[0] for t in tenants if t[2] == "bursty"][0]
+
+    out = {
+        "dataset": DATASET,
+        "fleet_rows": n_fleet,
+        "n_requests": len(trace),
+        "tenants": {
+            t[0]: {"rows": n_each, "kind": t[2],
+                   "offered_qps": round(t[3] * fair, 1),
+                   "offered_vs_fair": t[3]}
+            for t in tenants
+        },
+        "virtual_capacity_qps": round(capacity, 1),
+        "fair_share_qps": round(fair, 1),
+    }
+
+    # ------------------------------------------------------------------
+    # 1. shared-queue baseline: no isolation of any kind
+    # ------------------------------------------------------------------
+    shared_rt = FleetRuntime(fleet, FleetConfig(max_batch=BATCH, fair=False))
+    shared = shared_rt.run_trace(trace)
+    out["shared"] = {
+        "slo_hit_rate": {n: round(shared.slo_hit_rate(n), 4)
+                         for n in fleet.names()},
+        "rejected": 0,
+        "wall_qps": round(sum(
+            t.n_completed for t in shared.telemetry.tenants.values()) /
+            max(sum(t.wall_exec_s for t in shared.telemetry.tenants.values()),
+                1e-9), 1),
+    }
+    quiet_shared = min(out["shared"]["slo_hit_rate"][n] for n in quiet_names)
+    print(f"  shared-queue quiet SLO hit-rate: {quiet_shared:.3f} "
+          f"(noisy {out['shared']['slo_hit_rate'][noisy_name]:.3f})")
+
+    # ------------------------------------------------------------------
+    # 2. fleet mode: fair share + admission + autoscale (run TWICE)
+    # ------------------------------------------------------------------
+    def fleet_run():
+        rt = FleetRuntime(
+            fleet, FleetConfig(max_batch=BATCH, fair=True),
+            admission=AdmissionController.for_fleet(fleet),
+            autoscale=AutoscaleConfig(
+                eval_every=0.05, min_window=24, grow_miss_rate=0.15,
+                shrink_miss_rate=0.02, cooldown=0.05),
+        )
+        return rt.run_trace(trace)
+
+    rep1 = fleet_run()
+    rep2 = fleet_run()
+
+    batches1 = _per_tenant_batches(rep1, trace)
+    replay_identical = (
+        batches1 == _per_tenant_batches(rep2, trace)
+        and rep1.rejected == rep2.rejected
+        and rep1.telemetry.counters() == rep2.telemetry.counters()
+        and _ids_digest(rep1) == _ids_digest(rep2)
+    )
+    grows = [e for e in rep1.scale_events if e.action == "grow"]
+    shrinks = [e for e in rep1.scale_events if e.action == "shrink"]
+    out["fleet"] = {
+        "slo_hit_rate": {n: round(rep1.slo_hit_rate(n), 4)
+                         for n in fleet.names()},
+        "rejected": len(rep1.rejected),
+        "rejected_by_tenant": dict(rep1.telemetry.rejects),
+        "scale_events": [e.as_dict() for e in rep1.scale_events],
+        "n_grow": len(grows),
+        "n_shrink": len(shrinks),
+        "wall_qps": round(sum(
+            t.n_completed for t in rep1.telemetry.tenants.values()) /
+            max(sum(t.wall_exec_s for t in rep1.telemetry.tenants.values()),
+                1e-9), 1),
+    }
+    out["replay_identical"] = bool(replay_identical)
+    quiet_fleet = min(out["fleet"]["slo_hit_rate"][n] for n in quiet_names)
+    print(f"  fleet quiet SLO hit-rate: {quiet_fleet:.3f} "
+          f"(noisy {out['fleet']['slo_hit_rate'][noisy_name]:.3f}, "
+          f"{len(rep1.rejected)} shed, {len(grows)} grows, "
+          f"{len(shrinks)} shrinks)")
+    print(f"  replay bit-identical: {replay_identical}")
+
+    out["acceptance"] = {
+        "noisy_offered_vs_fair_ge_8x": NOISY_FACTOR >= 8.0,
+        "quiet_slo_fleet_ge_0.95": quiet_fleet >= QUIET_TARGET,
+        "quiet_slo_shared_lt_0.6": quiet_shared < SHARED_CEIL,
+        "autoscale_event_fired": len(grows) + len(shrinks) >= 1,
+        "replay_identical": bool(replay_identical),
+    }
+    ok = all(out["acceptance"].values())
+    print(f"acceptance: {'PASS' if ok else 'FAIL'} {out['acceptance']}")
+
+    # headline scale owns BENCH_fleet.json; other scales write a
+    # scale-suffixed (gitignored) file so they can't clobber the
+    # committed 100k record
+    name = ("BENCH_fleet.json" if n_fleet == 100_000
+            else f"BENCH_fleet_n{n_fleet}.json")
+    path = REPO_ROOT / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+def run():
+    """`benchmarks/run.py` adaptor: one row per serving mode."""
+    out = main()
+    quiet = [n for n, t in out["tenants"].items() if t["kind"] == "poisson"]
+    return [
+        {
+            "name": mode,
+            "quiet_slo": min(out[mode]["slo_hit_rate"][n] for n in quiet),
+            "rejected": out[mode]["rejected"],
+            "wall_qps": out[mode]["wall_qps"],
+        }
+        for mode in ("shared", "fleet")
+    ]
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("REPRO_BENCH_SCALE", "reduced")   # 100k fleet
+    main()

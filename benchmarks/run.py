@@ -83,6 +83,13 @@ def main() -> None:
             f"latency_ratio={r['ratio']};recall={r['recall']}"
         )
 
+    from . import fleet_bench
+    for r in fleet_bench.run():
+        print(
+            f"fleet_{r['name']},{r['wall_qps']},"
+            f"quiet_slo={r['quiet_slo']};rejected={r['rejected']}"
+        )
+
     print(f"# total bench wall time {time.time()-t_start:.1f}s", file=sys.stderr)
 
 

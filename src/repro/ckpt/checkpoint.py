@@ -117,6 +117,13 @@ class Checkpointer:
         with open(os.path.join(d, "manifest.json")) as f:
             return json.load(f).get("meta", {})
 
+    def latest_meta(self) -> Dict[str, Any]:
+        """``read_meta`` of the most recent checkpoint (``{}`` when the
+        directory holds none) — how a fleet restores its manifest without
+        tracking step numbers."""
+        s = self.latest_step()
+        return self.read_meta(s) if s is not None else {}
+
     def restore(
         self,
         step: int,

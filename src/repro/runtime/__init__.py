@@ -18,8 +18,10 @@ from .queue import (
     ArrivalTrace,
     RequestQueue,
     RuntimeRequest,
+    TenantTraceSpec,
     bursty_trace,
     make_trace,
+    multi_tenant_trace,
     poisson_trace,
 )
 from .scheduler import OnlineRuntime, RuntimeReport, SchedulerConfig, ServiceModel
@@ -34,6 +36,8 @@ __all__ = [
     "poisson_trace",
     "bursty_trace",
     "make_trace",
+    "TenantTraceSpec",
+    "multi_tenant_trace",
     "SchedulerConfig",
     "ServiceModel",
     "OnlineRuntime",

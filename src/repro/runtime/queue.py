@@ -20,6 +20,12 @@ Both draw predicates Zipf-distributed from a pool (a few hot filters
 dominate — the regime the predicate cache and the batched pre-filter
 group are designed for) and assign SLO tiers by a mix ratio; a tier maps
 to a relative deadline (``SLO_TIERS``).
+
+Multi-tenant streams (:func:`multi_tenant_trace`) interleave one seeded
+per-tenant sub-trace per :class:`TenantTraceSpec` — each tenant keeps its
+own shape, rate, tier mix, and (for the noisy-neighbor profile) burst
+parameters — into ONE arrival stream with dense global rids, so the fleet
+scheduler replays exactly like the single-tenant runtime does.
 """
 from __future__ import annotations
 
@@ -35,8 +41,10 @@ __all__ = [
     "RuntimeRequest",
     "ArrivalTrace",
     "RequestQueue",
+    "TenantTraceSpec",
     "poisson_trace",
     "bursty_trace",
+    "multi_tenant_trace",
     "make_trace",
 ]
 
@@ -70,6 +78,8 @@ class RuntimeRequest:
     deadline: float = np.inf      # ABSOLUTE virtual time
     op: str = "query"             # "query" | "upsert" | "delete"
     payload: Optional[tuple] = None
+    tenant: str = ""              # owning collection (fleet serving); ""
+                                  # means the single-tenant runtime
 
     @property
     def priority(self):
@@ -134,6 +144,16 @@ class RequestQueue:
 # ----------------------------------------------------------------------
 # trace generators
 # ----------------------------------------------------------------------
+def _check_fracs(write_frac: float, upsert_frac: float) -> None:
+    """Trace-generator construction guard: a probability outside [0, 1]
+    silently degenerates the write mix (numpy comparisons just saturate),
+    so reject it loudly instead of emitting an unusable trace."""
+    if not 0.0 <= write_frac <= 1.0:
+        raise ValueError(f"write_frac must be in [0, 1], got {write_frac}")
+    if not 0.0 <= upsert_frac <= 1.0:
+        raise ValueError(f"upsert_frac must be in [0, 1], got {upsert_frac}")
+
+
 def _assemble(
     arrivals: np.ndarray,
     queries: np.ndarray,
@@ -226,6 +246,7 @@ def poisson_trace(
     ``write_frac > 0`` interleaves live-corpus writes into the stream:
     upserts draw rows (cycling) from ``write_corpus = (vectors, cat, num)``,
     deletes cycle through ``delete_pool`` handles."""
+    _check_fracs(write_frac, upsert_frac)
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n_requests)
     arrivals = np.cumsum(gaps)
@@ -257,6 +278,7 @@ def bursty_trace(
     ``burst_frac`` of each ``cycle`` runs at ``burst_factor`` x the off-rate
     (off-rate solved so the time-average stays ``rate``) — the flash-crowd
     shape that stresses queueing and deadline misses."""
+    _check_fracs(write_frac, upsert_frac)
     rng = np.random.default_rng(seed)
     # rate_off * (1 - f + f * factor) = rate
     rate_off = rate / (1.0 - burst_frac + burst_frac * burst_factor)
@@ -281,3 +303,65 @@ def make_trace(kind: str, *args, **kwargs) -> ArrivalTrace:
     if gen is None:
         raise ValueError(f"unknown trace kind {kind!r} (poisson|bursty)")
     return gen(*args, **kwargs)
+
+
+# ----------------------------------------------------------------------
+# multi-tenant traces
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class TenantTraceSpec:
+    """One tenant's slice of a multi-tenant arrival stream.
+
+    ``kind="bursty"`` with a large ``burst_factor`` is the configurable
+    noisy-neighbor profile: the tenant idles near its off-rate and slams
+    ``burst_factor``x that rate for ``burst_frac`` of every ``cycle``
+    (see :func:`bursty_trace` — the time-average stays ``rate``)."""
+
+    tenant: str
+    queries: np.ndarray
+    preds: Sequence[AnyPredicate]
+    n_requests: int
+    rate: float                              # mean virtual qps for this tenant
+    kind: str = "poisson"                    # "poisson" | "bursty"
+    k: int = 10
+    tier_mix: Optional[Dict[str, float]] = None
+    zipf_a: float = 1.2
+    burst_factor: float = 8.0                # bursty-only knobs
+    burst_frac: float = 0.25
+    cycle: float = 0.25
+
+
+def multi_tenant_trace(
+    specs: Sequence[TenantTraceSpec], seed: int = 0
+) -> ArrivalTrace:
+    """Interleave one seeded sub-trace per tenant into a single stream.
+
+    Each spec generates through the ordinary single-tenant generators with
+    its own derived seed (``seed + 1009 * index`` — stable under replay,
+    distinct across tenants), every request is tagged with its tenant
+    name, and the merged stream is re-numbered with dense global rids in
+    ``(t_arrival, spec order, local rid)`` order so the scheduler's
+    rid-based tie-breaks stay total and deterministic."""
+    if not specs:
+        raise ValueError("multi_tenant_trace needs at least one TenantTraceSpec")
+    names = [s.tenant for s in specs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names in specs: {names}")
+    tagged = []
+    for si, spec in enumerate(specs):
+        kw = dict(k=spec.k, tier_mix=spec.tier_mix, zipf_a=spec.zipf_a,
+                  seed=seed + 1009 * si)
+        if spec.kind == "bursty":
+            kw.update(burst_factor=spec.burst_factor,
+                      burst_frac=spec.burst_frac, cycle=spec.cycle)
+        sub = make_trace(spec.kind, spec.queries, spec.preds,
+                         spec.n_requests, spec.rate, **kw)
+        for r in sub:
+            tagged.append((r.t_arrival, si, r.rid, r))
+    tagged.sort(key=lambda x: x[:3])
+    reqs = [
+        dataclasses.replace(r, rid=rid, tenant=specs[si].tenant)
+        for rid, (_, si, _, r) in enumerate(tagged)
+    ]
+    total_rate = float(sum(s.rate for s in specs))
+    return ArrivalTrace(reqs, "multi", total_rate, seed)

@@ -231,6 +231,49 @@ class ShardedANNEngine:
             return self.compact()
         return None
 
+    def reshard(self, n_shards: int) -> "ShardedANNEngine":
+        """Repartition a LIVE deployment onto ``n_shards`` shards in place —
+        the elastic-autoscale hook (`repro.fleet.autoscale`) and the
+        dead-shard recovery path (`dist.fault` + `dist.elastic.replan_mesh`
+        decide the new count; this applies it).
+
+        The central engine is the source of truth for every row, so the
+        old shard objects are dropped whole: the base corpus re-partitions
+        through ``shard_corpus``, segment rows (upserts since the last
+        compaction) are re-placed under the same ``gid % n_shards`` owner
+        rule the streaming path uses, tombstones re-apply through the
+        rebuilt locator arrays, and queries keep merging exactly — any
+        global top-k element is still in its owning shard's top-k
+        regardless of the partition.  Deterministic: per-shard builds are
+        seeded by shard index, so the same (corpus state, n_shards) pair
+        always produces the same shards."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        live = self.engine.live
+        self.n_shards = n_shards
+        self.shards = self.engine.shard_corpus(n_shards, n_lists=self._n_lists)
+        self._build_locators()          # covers base rows; segment rows next
+        if live.seg_n:
+            gids = np.arange(live.base_n, live.n_total, dtype=np.int64)
+            v = np.atleast_2d(live.seg_vectors())
+            c, m = np.atleast_2d(live.seg_cat()), np.atleast_2d(live.seg_num())
+            self._grow_locators(live.n_total)
+            owner = (gids % len(self.shards)).astype(np.int32)
+            for si, s in enumerate(self.shards):
+                rows = np.nonzero(owner == si)[0]
+                if not rows.size:
+                    continue
+                lh = s.upsert_local(v[rows], c[rows], m[rows],
+                                    global_ids=gids[rows])
+                self._loc_shard[gids[rows]] = si
+                self._loc_pos[gids[rows]] = lh
+        if live.n_deleted:
+            from ..filter.bitmap import expand_words
+
+            dead = np.nonzero(expand_words(live.tomb, live.n_total))[0]
+            self._delete_on_shards(dead)
+        return self
+
     # ------------------------------------------------------------------
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         q = np.atleast_2d(q)

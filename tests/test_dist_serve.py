@@ -128,3 +128,46 @@ def test_sharded_empty_predicate_and_tiny_shards(small_system):
     assert sum(s.ids.size for s in tiny.shards) == 10
     r = tiny.query(tq[0], tp[0], k=3)
     assert r.result.ids.shape == (1, 3)
+
+
+def test_dead_shard_detection_replans_and_merge_stays_exact(small_system):
+    """Satellite: dist.fault + dist.elastic under the SERVING path.  A
+    shard that stops heartbeating mid-trace is flagged by the monitor,
+    ``replan_mesh`` validates the survivor mesh, ``reshard`` repartitions
+    the live deployment — and the merged top-k over the survivors stays
+    bit-identical to the flat engine for exact plans."""
+    from repro.dist import HeartbeatMonitor, replan_mesh
+
+    ds, eng, tq, tp = small_system
+    sharded = ShardedANNEngine(eng, n_shards=4)
+    exact = [(q, p, r) for q, p in zip(tq, tp)
+             if (r := eng.query(q, p, k=10)).decision in (0, 2)]
+    assert exact, "fixture must include at least one exact-plan query"
+
+    hb = HeartbeatMonitor(n_hosts=4, timeout=0.05)
+    dead_shard = 2
+    now = 0.0
+    events = []
+    for step in range(12):                     # virtual serving loop
+        now += 0.01
+        for si in range(4):
+            if si == dead_shard and step >= 4:
+                continue                       # shard dies mid-trace
+            hb.beat(si, now)
+        events += hb.check(step, now)
+        # the serving path keeps answering while the shard is dying
+        q, p, _ = exact[step % len(exact)]
+        sharded.query(q, p, k=10)
+    assert [e.kind for e in events] == ["dead_host"]
+    assert events[0].host == dead_shard
+
+    survivors = len(hb.alive)
+    assert survivors == 3
+    shape, axes = replan_mesh(survivors, model_parallel=1)
+    assert shape == (3, 1) and axes == ("data", "model")
+    sharded.reshard(survivors)
+    assert len(sharded.shards) == 3
+    for q, p, flat in exact:
+        merged = sharded.query(q, p, k=10)
+        assert merged.decision == flat.decision
+        assert np.array_equal(merged.result.ids, flat.result.ids)

@@ -1,0 +1,457 @@
+"""repro.fleet: collections, admission, fair-share batching, autoscaling.
+
+Load-bearing guarantees:
+
+* **replay determinism** — the virtual/real split survives multi-tenancy:
+  same multi-tenant trace + seed => identical per-tenant batch
+  compositions, result ids, telemetry counters, admission rejects, and
+  scale events across runs;
+* **isolation** — per-tenant engines mean partitioned predicate/plan
+  caches; DRR batch formation honours fair-share weights no matter how
+  deep a noisy tenant's backlog is;
+* **admission** — over-budget queries shed deterministically by rid,
+  tenants inside their budget are never rejected, writes always pass;
+* **elasticity** — sustained SLO pressure grows a tenant's shard
+  assignment through ``replan_mesh`` (and shrinks it back), dead shards
+  recover onto the survivors, and results stay exact throughout.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, FilteredANNEngine
+from repro.core.trainer import gen_queries
+from repro.data import make_dataset
+from repro.fleet import (
+    AdmissionController,
+    AutoscaleConfig,
+    CollectionSchema,
+    FaultInjection,
+    FieldSpec,
+    Fleet,
+    FleetConfig,
+    FleetRuntime,
+    TenantCollection,
+    TokenBucket,
+)
+from repro.runtime import RuntimeRequest, TenantTraceSpec, multi_tenant_trace
+from repro.runtime.queue import RequestQueue
+
+K = 10
+SCALE = "2000"
+
+
+def _tenant_data(seed):
+    ds = make_dataset("arxiv", scale=SCALE, seed=seed)
+    qs, preds, _ = gen_queries(
+        ds.vectors, ds.cat, ds.num, 8, kinds=ds.filter_kinds,
+        sel_range=(0.01, 0.4), seed=seed + 1,
+    )
+    return ds, qs, list(preds)
+
+
+@pytest.fixture(scope="module")
+def fleet_system():
+    """Two tenants with different schemas/tiers/weights + their workloads."""
+    fleet = Fleet(total_shards=6)
+    data = {}
+    for name, tier, weight, n_shards, seed in [
+        ("alpha", "interactive", 2.0, 1, 0),
+        ("beta", "standard", 1.0, 2, 3),
+    ]:
+        ds, qs, preds = _tenant_data(seed)
+        schema = CollectionSchema(
+            name=name, dim=ds.vectors.shape[1], slo_tier=tier, weight=weight,
+            n_shards=n_shards,
+            fields=(FieldSpec("cat0", "tag"),) * ds.cat.shape[1]
+            if ds.cat.shape[1] == 1 else (),
+        )
+        fleet.create(schema, ds.vectors, ds.cat, ds.num,
+                     config=EngineConfig(n_lists=16, seed=0))
+        data[name] = (ds, qs, preds)
+    return fleet, data
+
+
+def _specs(data, n=120, rates=(1500.0, 1500.0), kinds=("poisson", "bursty")):
+    return [
+        TenantTraceSpec(name, qs, preds, n, rate, kind=kind, k=K)
+        for (name, (_, qs, preds)), rate, kind
+        in zip(data.items(), rates, kinds)
+    ]
+
+
+# ----------------------------------------------------------------------
+# schemas + collections
+# ----------------------------------------------------------------------
+def test_schema_validation():
+    with pytest.raises(ValueError):
+        CollectionSchema(name="", dim=8)
+    with pytest.raises(ValueError):
+        CollectionSchema(name="x", dim=8, slo_tier="platinum")
+    with pytest.raises(ValueError):
+        CollectionSchema(name="x", dim=8, weight=0.0)
+    with pytest.raises(ValueError):
+        CollectionSchema(name="x", dim=8, n_shards=0)
+    with pytest.raises(ValueError):
+        FieldSpec("f", "geo")
+
+
+def test_schema_from_dict_redisvl_idiom():
+    s = CollectionSchema.from_dict({
+        "index": {"name": "products", "slo_tier": "interactive", "weight": 2.0},
+        "fields": [
+            {"name": "embedding", "type": "vector", "attrs": {"dims": 64}},
+            {"name": "brand", "type": "tag"},
+            {"name": "price", "type": "numeric"},
+        ],
+    })
+    assert s.name == "products" and s.dim == 64
+    assert s.tag_fields == ("brand",) and s.numeric_fields == ("price",)
+    assert s.slo_tier == "interactive" and s.weight == 2.0
+
+
+def test_schema_rejects_mismatched_corpus():
+    ds, _, _ = _tenant_data(0)
+    s = CollectionSchema(name="x", dim=ds.vectors.shape[1] + 1)
+    with pytest.raises(ValueError):
+        s.validate_rows(ds.vectors, ds.cat, ds.num)
+    s2 = CollectionSchema(
+        name="x", dim=ds.vectors.shape[1],
+        fields=tuple(FieldSpec(f"t{i}", "tag") for i in range(ds.cat.shape[1] + 2)),
+    )
+    with pytest.raises(ValueError):
+        s2.validate_rows(ds.vectors, ds.cat, ds.num)
+
+
+def test_fleet_registry_and_budget(fleet_system):
+    fleet, data = fleet_system
+    assert fleet.names() == ["alpha", "beta"]
+    assert "alpha" in fleet and len(fleet) == 2
+    assert fleet.shards_in_use == 3
+    ds, _, _ = _tenant_data(0)
+    with pytest.raises(ValueError):      # duplicate name
+        fleet.create(CollectionSchema(name="alpha", dim=ds.vectors.shape[1]),
+                     ds.vectors, ds.cat, ds.num)
+    with pytest.raises(ValueError):      # would exceed the shard budget
+        fleet.create(
+            CollectionSchema(name="gamma", dim=ds.vectors.shape[1], n_shards=4),
+            ds.vectors, ds.cat, ds.num)
+
+
+def test_partitioned_caches(fleet_system):
+    """One tenant's traffic warms ONLY its own plan/predicate caches."""
+    fleet, data = fleet_system
+    _, qs, preds = data["alpha"]
+    a0 = fleet["alpha"].stats()["plan_cache"]["hits"]
+    b0 = fleet["beta"].stats()["plan_cache"]["hits"]
+    for _ in range(3):
+        fleet["alpha"].batch_query(qs[:4], preds[:4], k=K)
+    assert fleet["alpha"].stats()["plan_cache"]["hits"] > a0
+    assert fleet["beta"].stats()["plan_cache"]["hits"] == b0
+
+
+# ----------------------------------------------------------------------
+# multi-tenant traces
+# ----------------------------------------------------------------------
+def test_multi_tenant_trace_shape_and_determinism(fleet_system):
+    _, data = fleet_system
+    a = multi_tenant_trace(_specs(data), seed=7)
+    b = multi_tenant_trace(_specs(data), seed=7)
+    assert [r.rid for r in a] == list(range(len(a)))          # dense rids
+    assert [(r.t_arrival, r.tenant) for r in a] == \
+           [(r.t_arrival, r.tenant) for r in b]
+    assert sorted(set(r.tenant for r in a)) == ["alpha", "beta"]
+    ts = [r.t_arrival for r in a]
+    assert ts == sorted(ts)
+    c = multi_tenant_trace(_specs(data), seed=8)
+    assert [r.t_arrival for r in a] != [r.t_arrival for r in c]
+    with pytest.raises(ValueError):
+        multi_tenant_trace([])
+    dup = _specs(data)
+    dup[1] = TenantTraceSpec("alpha", dup[1].queries, dup[1].preds, 10, 100.0)
+    with pytest.raises(ValueError):
+        multi_tenant_trace(dup)
+
+
+# ----------------------------------------------------------------------
+# admission control
+# ----------------------------------------------------------------------
+def test_token_bucket_refill_and_burst():
+    b = TokenBucket(rate=10.0, burst=2.0)
+    assert b.try_take(0.0) and b.try_take(0.0)
+    assert not b.try_take(0.0)            # burst exhausted
+    assert b.try_take(0.1)                # 0.1s * 10/s = 1 token back
+    assert not b.try_take(0.1)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0, burst=1.0)
+
+
+def test_admission_sheds_deterministically_and_writes_pass():
+    ctrl = AdmissionController({"noisy": (100.0, 5.0)})
+
+    def q(rid, t, tenant):
+        return RuntimeRequest(rid=rid, t_arrival=t, query=None, pred=None,
+                              k=K, tenant=tenant)
+
+    out1 = [ctrl.admit(q(i, i * 0.001, "noisy")) for i in range(50)]
+    ctrl.reset()
+    out2 = [ctrl.admit(q(i, i * 0.001, "noisy")) for i in range(50)]
+    assert out1 == out2                   # pure function of the trace
+    assert not all(out1) and any(out1)    # bucket bites past the burst
+    ctrl.reset()
+    # un-budgeted tenants and writes always pass
+    assert ctrl.admit(q(0, 0.0, "quiet"))
+    w = RuntimeRequest(rid=1, t_arrival=0.0, query=None, pred=None, k=K,
+                       op="upsert", payload=(None,), tenant="noisy")
+    for _ in range(20):
+        assert ctrl.admit(w)
+    assert ctrl.counters()["rejected"] == {}
+
+
+# ----------------------------------------------------------------------
+# fair-share batching
+# ----------------------------------------------------------------------
+def test_drr_honours_weights(fleet_system):
+    """Saturated backlogs: batch slots split ~weight-proportionally
+    (alpha weight 2.0 vs beta 1.0)."""
+    fleet, data = fleet_system
+    rt = FleetRuntime(fleet)
+    queues = {n: RequestQueue() for n in fleet.names()}
+    for name in fleet.names():
+        _, qs, preds = data[name]
+        for i in range(100):
+            queues[name].push(RuntimeRequest(
+                rid=i if name == "alpha" else 1000 + i, t_arrival=0.0,
+                query=qs[i % len(qs)], pred=preds[i % len(preds)], k=K,
+                tenant=name))
+    deficit = {n: 0.0 for n in fleet.names()}
+    batch = rt._drr_batch(queues, deficit, 30)
+    share = {n: sum(r.tenant == n for r in batch) for n in fleet.names()}
+    assert len(batch) == 30
+    assert share["alpha"] == 20 and share["beta"] == 10
+
+
+def test_drr_drains_fully_when_one_queue_empties(fleet_system):
+    fleet, data = fleet_system
+    rt = FleetRuntime(fleet)
+    queues = {n: RequestQueue() for n in fleet.names()}
+    _, qs, preds = data["beta"]
+    for i in range(10):
+        queues["beta"].push(RuntimeRequest(
+            rid=i, t_arrival=0.0, query=qs[0], pred=preds[0], k=K,
+            tenant="beta"))
+    batch = rt._drr_batch(queues, {n: 0.0 for n in fleet.names()}, 32)
+    assert len(batch) == 10               # no slots wasted on the empty queue
+
+
+def test_fleet_replay_bit_identical(fleet_system):
+    """The tentpole guarantee: admission + DRR + autoscale, two runs,
+    identical batches / rejects / ids / counters / scale events."""
+    fleet, data = fleet_system
+    trace = multi_tenant_trace(_specs(data, n=150, rates=(2500.0, 2500.0)),
+                               seed=11)
+    adm = AdmissionController.for_fleet(fleet, default_rate=2000.0)
+    rt = FleetRuntime(
+        fleet, FleetConfig(max_batch=32), admission=adm,
+        autoscale=AutoscaleConfig(eval_every=0.02, cooldown=0.05, min_window=8))
+    r1 = rt.run_trace(trace)
+    r2 = rt.run_trace(trace)
+    assert r1.batches == r2.batches
+    assert r1.rejected == r2.rejected
+    assert r1.telemetry.counters() == r2.telemetry.counters()
+    assert [e.as_dict() for e in r1.scale_events] == \
+           [e.as_dict() for e in r2.scale_events]
+    for rid in r1.results:
+        assert (r1.ids(rid) == r2.ids(rid)).all()
+
+
+def _assert_matches_flat(fleet, req, res):
+    """The sharded-path contract: exact plans (PRE_FILTER/INDEXED_PRE)
+    merge bit-identical to the tenant's flat engine; POST_FILTER probes
+    per-shard candidate sets (recall legitimately varies with the live
+    shard count), so require every returned id to satisfy the predicate."""
+    eng = fleet[req.tenant].engine
+    if res.decision in (0, 2):
+        flat = eng.query(req.query, req.pred, k=req.k)
+        assert (res.result.ids[0] == flat.result.ids[0]).all()
+    else:
+        ids = res.result.ids[res.result.ids >= 0]
+        if ids.size:
+            cat, num = eng.live.row_attrs(ids)
+            assert req.pred.eval(cat, num).all()
+
+
+def test_fleet_results_exact_vs_flat_engine(fleet_system):
+    """Per-tenant serving (through any autoscale resharding) keeps the
+    sharded exactness contract against each tenant's own flat engine."""
+    fleet, data = fleet_system
+    trace = multi_tenant_trace(_specs(data, n=80), seed=13)
+    rt = FleetRuntime(fleet, FleetConfig(max_batch=32),
+                      autoscale=AutoscaleConfig(eval_every=0.02, cooldown=0.05,
+                                                min_window=8))
+    rep = rt.run_trace(trace)
+    by_rid = {r.rid: r for r in trace}
+    for rid, res in rep.results.items():
+        _assert_matches_flat(fleet, by_rid[rid], res)
+
+
+def test_shared_baseline_differs_and_loses_isolation(fleet_system):
+    fleet, data = fleet_system
+    trace = multi_tenant_trace(_specs(data, n=150, rates=(4000.0, 800.0)),
+                               seed=17)
+    fair = FleetRuntime(fleet, FleetConfig(max_batch=32)).run_trace(trace)
+    shared = FleetRuntime(
+        fleet, FleetConfig(max_batch=32, fair=False)).run_trace(trace)
+    # both replay deterministically, but compositions differ
+    assert fair.batches != shared.batches
+    assert shared.telemetry.counters() == FleetRuntime(
+        fleet, FleetConfig(max_batch=32, fair=False)
+    ).run_trace(trace).telemetry.counters()
+
+
+# ----------------------------------------------------------------------
+# autoscaling
+# ----------------------------------------------------------------------
+def test_autoscale_grow_under_overload_and_budget_cap(fleet_system):
+    fleet, data = fleet_system
+    _, qs, preds = data["alpha"]
+    specs = [TenantTraceSpec("alpha", qs, preds, 400, 5000.0, k=K,
+                             tier_mix={"interactive": 1.0})]
+    trace = multi_tenant_trace(specs, seed=19)
+    rt = FleetRuntime(
+        fleet, FleetConfig(max_batch=32),
+        autoscale=AutoscaleConfig(eval_every=0.01, cooldown=0.0, min_window=8,
+                                  grow_miss_rate=0.1))
+    rep = rt.run_trace(trace)
+    grows = [e for e in rep.scale_events if e.action == "grow"]
+    assert grows, "sustained interactive overload must trigger a grow"
+    assert grows[0].tenant == "alpha"
+    assert grows[0].to_shards == grows[0].from_shards + 1
+    assert grows[0].mesh == (grows[0].to_shards, 1)       # replan_mesh shape
+    # the fleet budget is a hard cap
+    assert max(e.to_shards for e in grows) + fleet["beta"].schema.n_shards \
+        <= fleet.total_shards
+    fleet.reset_shards()
+
+
+def test_autoscale_shrink_when_idle(fleet_system):
+    fleet, data = fleet_system
+    _, qs, preds = data["beta"]
+    specs = [TenantTraceSpec("beta", qs, preds, 150, 400.0, k=K,
+                             tier_mix={"batch": 1.0})]
+    rt = FleetRuntime(
+        fleet, FleetConfig(max_batch=32),
+        autoscale=AutoscaleConfig(eval_every=0.02, cooldown=0.0, min_window=8))
+    rep = rt.run_trace(multi_tenant_trace(specs, seed=23))
+    shrinks = [e for e in rep.scale_events
+               if e.action == "shrink" and e.tenant == "beta"]
+    assert shrinks, "an idle 2-shard tenant must release capacity"
+    assert shrinks[0].from_shards == 2 and shrinks[0].to_shards == 1
+    fleet.reset_shards()
+
+
+def test_dead_shard_recovery_keeps_results_exact(fleet_system):
+    """FaultInjection kills a shard mid-trace: the heartbeat monitor flags
+    it, the tenant reshards onto survivors via replan_mesh, and every
+    result before AND after still matches the flat engine."""
+    fleet, data = fleet_system
+    _, qs, preds = data["beta"]
+    specs = [TenantTraceSpec("beta", qs, preds, 200, 2000.0, k=K)]
+    trace = multi_tenant_trace(specs, seed=29)
+    t_mid = trace.requests[len(trace.requests) // 2].t_arrival
+    rt = FleetRuntime(
+        fleet, FleetConfig(max_batch=32),
+        autoscale=AutoscaleConfig(eval_every=0.02, cooldown=0.0,
+                                  min_window=10**9,        # SLO policy off:
+                                  heartbeat_timeout=0.02),  # isolate recovery
+        faults=[FaultInjection(t=t_mid, tenant="beta", shard=1)])
+    rep = rt.run_trace(trace)
+    recoveries = [e for e in rep.scale_events if e.action == "recover"]
+    assert recoveries and recoveries[0].tenant == "beta"
+    assert recoveries[0].to_shards == recoveries[0].from_shards - 1
+    assert recoveries[0].mesh == (recoveries[0].to_shards, 1)
+    assert recoveries[0].t > t_mid                        # flagged after death
+    by_rid = {r.rid: r for r in trace}
+    for rid, res in rep.results.items():
+        _assert_matches_flat(fleet, by_rid[rid], res)
+    fleet.reset_shards()
+
+
+# ----------------------------------------------------------------------
+# fleet manifest checkpointing
+# ----------------------------------------------------------------------
+def test_fleet_manifest_save_restore(tmp_path):
+    from repro.ckpt import Checkpointer
+
+    fleet = Fleet(total_shards=4)
+    datasets = {}
+    for name, seed in [("a", 0), ("b", 3)]:
+        ds, qs, preds = _tenant_data(seed)
+        datasets[name] = (ds, qs, preds)
+        fleet.create(
+            CollectionSchema(name=name, dim=ds.vectors.shape[1], n_shards=2),
+            ds.vectors, ds.cat, ds.num, config=EngineConfig(n_lists=16, seed=0))
+    # mutate tenant "a" only: upsert 5 rows, delete 3
+    ds_a = datasets["a"][0]
+    gids = fleet["a"].upsert(ds_a.vectors[:5], ds_a.cat[:5], ds_a.num[:5])
+    fleet["a"].delete(np.asarray([1, 2, int(gids[0])]))
+    fleet["a"].reshard(1)                 # manifest captures the live count
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+    fleet.save(ckpt, step=7)
+
+    meta = ckpt.latest_meta()["fleet"]
+    assert meta["tenants"]["a"]["n_shards"] == 1
+    assert meta["tenants"]["b"]["corpus_generation"] == 0
+    assert meta["tenants"]["a"]["corpus_generation"] > 0
+
+    # restore onto a freshly built fleet over the same base corpora
+    fleet2 = Fleet(total_shards=4)
+    for name in ("a", "b"):
+        ds = datasets[name][0]
+        fleet2.create(
+            CollectionSchema(name=name, dim=ds.vectors.shape[1], n_shards=2),
+            ds.vectors, ds.cat, ds.num, config=EngineConfig(n_lists=16, seed=0))
+    fleet2.restore(ckpt)
+    assert fleet2["a"].engine.live.n_total == fleet["a"].engine.live.n_total
+    assert fleet2["a"].engine.live.live_count == fleet["a"].engine.live.live_count
+    assert fleet2["a"].n_shards == 1      # manifest shard assignment reapplied
+    _, qs, preds = datasets["a"]
+    r1 = fleet["a"].query(qs[0], preds[0], k=K)
+    r2 = fleet2["a"].query(qs[0], preds[0], k=K)
+    assert (r1.result.ids[0] == r2.result.ids[0]).all()
+    missing = Fleet(total_shards=4)
+    ds, _, _ = _tenant_data(5)
+    missing.create(CollectionSchema(name="zz", dim=ds.vectors.shape[1]),
+                   ds.vectors, ds.cat, ds.num,
+                   config=EngineConfig(n_lists=16, seed=0))
+    with pytest.raises(ValueError):
+        missing.restore(ckpt)
+
+
+def test_reshard_preserves_live_state(fleet_system):
+    """reshard() on a mutated engine re-places segment rows + tombstones."""
+    _, data = fleet_system
+    ds, qs, preds = data["beta"]
+    eng = FilteredANNEngine(
+        ds.vectors, ds.cat, ds.num,
+        EngineConfig(n_lists=16, seed=0, max_tombstone_frac=0.9,
+                     max_segment_frac=0.9),
+    ).build()
+    col = TenantCollection(
+        CollectionSchema(name="solo", dim=ds.vectors.shape[1], n_shards=2), eng)
+    gids = col.upsert(ds.vectors[:7], ds.cat[:7], ds.num[:7])
+    col.delete(np.asarray([0, 5, int(gids[2])]))
+    flat = [eng.query(q, p, k=K) for q, p in zip(qs, preds)]
+    for n in (3, 1, 4):
+        col.reshard(n)
+        assert col.n_shards == n
+        for q, p, f in zip(qs, preds, flat):
+            got = col.query(q, p, k=K)
+            if f.decision in (0, 2):    # exact plans: reshard is invisible
+                assert (got.result.ids[0] == f.result.ids[0]).all()
+            else:
+                ids = got.result.ids[got.result.ids >= 0]
+                if ids.size:
+                    cat, num = eng.live.row_attrs(ids)
+                    assert p.eval(cat, num).all()
+    with pytest.raises(ValueError):
+        col.reshard(0)

@@ -87,6 +87,19 @@ def test_trace_generators_deterministic_and_shaped(system):
     assert cv(burst) > cv(pois)
 
 
+def test_trace_generators_reject_bad_write_fracs(system):
+    """Probabilities outside [0, 1] must fail loudly at construction —
+    they used to silently degenerate the write mix."""
+    _, _, qs, preds = system
+    for gen in (poisson_trace, bursty_trace):
+        for kw in ({"write_frac": 1.5}, {"write_frac": -0.1},
+                   {"upsert_frac": 2.0}, {"upsert_frac": -1e-9}):
+            with pytest.raises(ValueError):
+                gen(qs, preds, 10, 100.0, seed=0, **kw)
+        # the boundaries themselves are legal
+        gen(qs, preds, 10, 100.0, seed=0, write_frac=0.0, upsert_frac=1.0)
+
+
 def test_zipf_predicate_mix(system):
     """A few hot predicates dominate the trace (the cache-friendly regime)."""
     _, _, qs, preds = system
