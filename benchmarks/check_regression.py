@@ -1,0 +1,124 @@
+"""Bench regression gate: compare a bench JSON against committed tolerance
+bands.
+
+Each CI bench-smoke job writes a scale-suffixed ``BENCH_<name>_n<N>.json``;
+this gate then checks the metrics named in ``benchmarks/tolerances.json``
+against their bands and fails the job on any violation, so quality
+regressions (recall, determinism counters, memory budgets) block the merge
+instead of silently drifting in an uploaded artifact nobody reads.
+
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_backend_n5000.json
+    PYTHONPATH=src python -m benchmarks.check_regression --name runtime \
+        BENCH_runtime_n5000.json
+
+Tolerance spec (``benchmarks/tolerances.json``)::
+
+    { "<bench>": { "<dotted.path>": {"min": x} | {"max": y} | {"equals": v}
+                                    | {"min": x, "max": y} } }
+
+Dotted paths index nested dicts and lists (integer segments index lists).
+Wall-clock metrics deliberately get NO bands — CI machines are too noisy —
+the gated set is the deterministic/quality ledger: recalls, counters,
+memory budgets, probe coverage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+TOLERANCES = Path(__file__).resolve().parent / "tolerances.json"
+
+
+def bench_name(path: Path) -> str:
+    """``BENCH_backend_n5000.json`` -> ``backend`` (scale suffix dropped)."""
+    m = re.fullmatch(r"BENCH_([A-Za-z0-9_]+?)(?:_n\d+)?\.json", path.name)
+    if not m:
+        raise ValueError(
+            f"cannot infer bench name from {path.name!r}; pass --name")
+    return m.group(1)
+
+
+def resolve(report, dotted: str):
+    """Walk ``a.b.0.c`` through nested dicts/lists; KeyError when absent."""
+    cur = report
+    for seg in dotted.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(seg)]
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                raise KeyError(dotted)
+            cur = cur[seg]
+        else:
+            raise KeyError(dotted)
+    return cur
+
+
+def check_band(value, band: dict):
+    """(ok, description) for one value against one band."""
+    if "equals" in band:
+        want = band["equals"]
+        return value == want, f"equals {want!r}"
+    parts = []
+    ok = True
+    if "min" in band:
+        parts.append(f">= {band['min']}")
+        ok = ok and value >= band["min"]
+    if "max" in band:
+        parts.append(f"<= {band['max']}")
+        ok = ok and value <= band["max"]
+    if not parts:
+        raise ValueError(f"empty tolerance band: {band}")
+    return ok, " and ".join(parts)
+
+
+def check_report(report: dict, bands: dict, label: str) -> int:
+    """Print one PASS/FAIL line per gated metric; return #failures."""
+    failures = 0
+    for dotted in sorted(bands):
+        band = bands[dotted]
+        try:
+            value = resolve(report, dotted)
+        except (KeyError, IndexError, ValueError):
+            print(f"FAIL {label}:{dotted} = <missing> (want {band})")
+            failures += 1
+            continue
+        ok, want = check_band(value, band)
+        print(f"{'PASS' if ok else 'FAIL'} {label}:{dotted} = {value!r} "
+              f"(want {want})")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("reports", nargs="+", type=Path,
+                    help="bench JSON file(s) to gate")
+    ap.add_argument("--name", default=None,
+                    help="tolerance key override (default: from filename)")
+    ap.add_argument("--tolerances", type=Path, default=TOLERANCES)
+    args = ap.parse_args(argv)
+
+    bands_all = json.loads(args.tolerances.read_text())
+    failures = 0
+    for path in args.reports:
+        name = args.name or bench_name(path)
+        if name not in bands_all:
+            print(f"FAIL {path.name}: no tolerance entry for bench "
+                  f"{name!r} in {args.tolerances.name}")
+            failures += 1
+            continue
+        report = json.loads(path.read_text())
+        failures += check_report(report, bands_all[name], name)
+    n = sum(len(bands_all.get(args.name or bench_name(p), {}))
+            for p in args.reports)
+    print(f"{n - failures}/{n} gated metrics within tolerance"
+          + (f"; {failures} FAILED" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,27 +8,11 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.masked_l2 import KPAD, TN, TQ
+from repro.kernels.ops import vmem_working_set
 from repro.index.flat import l2_topk
-
-
-def vmem_working_set(d: int) -> dict:
-    """Bytes resident in VMEM for one (query-tile, corpus-tile) step."""
-    q_tile = TQ * d * 4
-    x_tile = TN * d * 4
-    mask = TN * 4
-    dist_block = TQ * TN * 4
-    topk_scratch = 2 * TQ * KPAD * 4
-    total = q_tile + x_tile + mask + dist_block + topk_scratch
-    return {
-        "q_tile": q_tile, "x_tile": x_tile, "dist_block": dist_block,
-        "scratch": topk_scratch, "total": total,
-        "fits_16MiB": total < 16 * 2**20,
-    }
 
 
 def bench_xla_scan(n=65536, d=128, b=64, k=10, iters=3):

@@ -192,6 +192,46 @@ def _feedback_section(eng, ds, qs, preds, seed: int):
 
 
 # ----------------------------------------------------------------------
+# observability: live recall probe + traced span summary
+# ----------------------------------------------------------------------
+def _obs_section(eng, qs, preds, seed: int):
+    """Replay the canonical trace with a rate-1.0 recall probe and a tracer
+    attached: every served (plan, backend, knob) class must come out with
+    an online recall estimate, and the span summary gives the measured
+    where-does-the-time-go breakdown (acceptance: probe covers every
+    served class)."""
+    from repro.obs import RecallProbe, Tracer, span_summary
+    from repro.runtime import make_trace, OnlineRuntime, SchedulerConfig
+
+    trace = make_trace("poisson", qs, preds, _n_requests(), 2000.0, k=K,
+                       seed=seed)
+    tracer = Tracer()
+    probe = RecallProbe(rate=1.0, seed=seed)
+    rt = OnlineRuntime(eng, SchedulerConfig(max_batch=64, max_wait=0.005),
+                       tracer=tracer, probe=probe)
+    report = rt.run_trace(trace)
+    eng.set_tracer(None)            # leave the shared fixture untraced
+
+    served = {RecallProbe.class_key(r) for r in report.results.values()}
+    est = probe.estimates()
+    missing = sorted(served - set(est))
+    ok = not missing
+    print(f"  probe: {len(est)} served classes estimated "
+          f"({'PASS' if ok else 'FAIL: missing ' + str(missing)}: "
+          f"target every served class)")
+    assert ok, f"recall probe missed served classes: {missing}"
+    summary = span_summary(tracer)
+    for row in summary[:4]:
+        print(f"    {row['stage']}: count={row['count']} "
+              f"self={row['self_s'] * 1e3:.1f}ms")
+    return {
+        "probe": est,
+        "probe_counters": probe.counters(),
+        "span_summary": summary,
+    }
+
+
+# ----------------------------------------------------------------------
 def main():
     from .common import corpus_n, eval_queries, get_fixture
 
@@ -224,6 +264,9 @@ def main():
 
     print("online feedback recovery:")
     out["feedback"] = _feedback_section(eng, ds, qs, preds, seed=5)
+
+    print("observability (recall probe + span summary):")
+    out["obs"] = _obs_section(eng, qs, preds, seed=57)
 
     # headline scale owns BENCH_runtime.json; other scales (CI smoke, small
     # run.py sweeps) write a scale-suffixed (gitignored) file so they can't

@@ -21,6 +21,7 @@ import numpy as np
 from ..index.flat import l2_topk
 from ..index.ivf import IVFIndex
 from ..index.registry import BackendSet
+from ..obs.trace import NULL_TRACER
 from .corpus import CompactionPolicy, LiveCorpus
 from .executors import (
     IndexedPreFilterExec,
@@ -108,6 +109,32 @@ def _default_route_name(decision: int) -> Tuple[str, str]:
     return "flat", "exact"
 
 
+def _kernel_snapshot() -> Tuple[dict, dict]:
+    """Current (dispatch counts, dispatch wall) of the process-global kernel
+    ledger — an execute span annotates the DELTA across its body, so the
+    span carries exactly its own dispatches."""
+    from ..kernels import ops
+
+    return ops.dispatch_counts(), ops.dispatch_wall()
+
+
+def _annotate_kernel_delta(tracer, counts0: dict, wall0: dict) -> None:
+    """Attach per-kernel dispatch deltas since ``counts0``/``wall0`` to the
+    open span: counts on the deterministic ledger (``kernel_<name>`` attrs),
+    wall seconds on the real ledger (``kernel:<name>`` wall_detail keys —
+    what ``span_summary`` ranks against ``launch/roofline.py``)."""
+    from ..kernels import ops
+
+    for name, n in ops.dispatch_counts().items():
+        d = n - counts0.get(name, 0)
+        if d:
+            tracer.annotate(**{f"kernel_{name}": d})
+    for name, s in ops.dispatch_wall().items():
+        dw = s - wall0.get(name, 0.0)
+        if dw > 0.0:
+            tracer.add_wall(f"kernel:{name}", dw)
+
+
 def package_results(
     d: np.ndarray,
     ids: np.ndarray,
@@ -151,6 +178,7 @@ def _execute_grouped(
     ests: np.ndarray,
     routes: Optional[np.ndarray] = None,
     backend_set: Optional[BackendSet] = None,
+    tracer=None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Decision-grouped batch execution — the ONE implementation behind both
     the flat (`FilteredANNEngine.batch_query`) and sharded
@@ -166,6 +194,7 @@ def _execute_grouped(
     the (decision, backend, knob) extension of PR 2's decision grouping.
     Returns ``(dists (B, k), ids (B, k) local, expansion_rounds (B,))``.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     b = len(preds)
     out_d = np.full((b, k), np.inf, np.float32)
     out_i = np.full((b, k), -1, np.int32)
@@ -176,20 +205,34 @@ def _execute_grouped(
             if decisions[i] == decision:
                 groups.setdefault(preds[i], []).append(i)
         for pred, rows in groups.items():
-            res = ex.search(queries[rows], pred, k)
-            out_d[rows], out_i[rows] = res.dists, res.ids
+            bk, knob = _default_route_name(decision)
+            with tr.span("group", decision=STRATEGY_NAMES[decision],
+                         backend=bk, knob=knob, n_rows=len(rows)):
+                # split of ex.search(): mask once, then the fused masked
+                # top-k — bit-identical (search() is exactly this pair),
+                # but the mask stays visible for the candidate-count attr
+                t0 = time.perf_counter()
+                m = ex.candidate_mask(pred)
+                res = ex.search_masked(queries[rows], m, k, t0=t0)
+                if tr.enabled:
+                    tr.annotate(n_candidates=int(m.sum()))
+                out_d[rows], out_i[rows] = res.dists, res.ids
     routed = routes is not None and backend_set is not None
     post_rows = [
         i for i in range(b)
         if decisions[i] == POST_FILTER and not (routed and routes[i] >= 0)
     ]
     if post_rows:
-        d, ids, rnd = post_exec.search_rows(
-            queries[post_rows], [preds[i] for i in post_rows], k,
-            [float(ests[i]) for i in post_rows],
-        )
-        out_d[post_rows], out_i[post_rows] = d, ids
-        rounds[post_rows] = rnd
+        with tr.span("group", decision="post", backend="ivf", knob="adapt",
+                     n_rows=len(post_rows)):
+            d, ids, rnd = post_exec.search_rows(
+                queries[post_rows], [preds[i] for i in post_rows], k,
+                [float(ests[i]) for i in post_rows],
+            )
+            out_d[post_rows], out_i[post_rows] = d, ids
+            rounds[post_rows] = rnd
+            if tr.enabled:
+                tr.annotate(expansion_rounds=int(np.asarray(rnd).sum()))
     if routed:
         groups = {}
         for i in range(b):
@@ -198,10 +241,15 @@ def _execute_grouped(
         mask_ex = ipre_exec or pre_exec
         masks: dict = {}
         for (ci, pred), rows in groups.items():
-            if pred not in masks:
-                masks[pred] = mask_ex.candidate_mask(pred)
-            d, ids = backend_set.search_class(ci, queries[rows], masks[pred], k)
-            out_d[rows], out_i[rows] = d[:, :k], ids[:, :k]
+            bk, knob = backend_set.classes()[ci]
+            with tr.span("group", decision="post", backend=str(bk),
+                         knob=str(knob), n_rows=len(rows)):
+                if pred not in masks:
+                    masks[pred] = mask_ex.candidate_mask(pred)
+                d, ids = backend_set.search_class(ci, queries[rows], masks[pred], k)
+                if tr.enabled:
+                    tr.annotate(n_candidates=int(masks[pred].sum()))
+                out_d[rows], out_i[rows] = d[:, :k], ids[:, :k]
     return out_d, out_i, rounds
 
 
@@ -217,6 +265,7 @@ def _live_execute_grouped(
     live: LiveCorpus,
     routes: Optional[np.ndarray] = None,
     backend_set: Optional[BackendSet] = None,
+    tracer=None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Tombstone/segment-composing twin of ``_execute_grouped`` — the one
     batch executor every query takes once the corpus mutated.
@@ -235,6 +284,7 @@ def _live_execute_grouped(
     """
     from ..dist.collectives import merge_topk
 
+    tr = tracer if tracer is not None else NULL_TRACER
     b = len(preds)
     out_d = np.full((b, k), np.inf, np.float32)
     out_i = np.full((b, k), -1, np.int32)
@@ -266,25 +316,35 @@ def _live_execute_grouped(
             if decisions[i] == decision:
                 groups.setdefault(preds[i], []).append(i)
         for pred, rows in groups.items():
-            m = ex.candidate_mask(pred)
-            res = ex.search_masked(queries[rows], m[:base_n] & alive_base, k)
-            finish(rows, pred, res.dists, res.ids)
+            bk, knob = _default_route_name(decision)
+            with tr.span("group", decision=STRATEGY_NAMES[decision],
+                         backend=bk, knob=knob, n_rows=len(rows), live=True):
+                m = ex.candidate_mask(pred)
+                mm = m[:base_n] & alive_base
+                res = ex.search_masked(queries[rows], mm, k)
+                if tr.enabled:
+                    tr.annotate(n_candidates=int(mm.sum()))
+                finish(rows, pred, res.dists, res.ids)
     routed = routes is not None and backend_set is not None
     post_rows = [
         i for i in range(b)
         if decisions[i] == POST_FILTER and not (routed and routes[i] >= 0)
     ]
     if post_rows:
-        d, ids, rnd = post_exec.search_rows(
-            queries[post_rows], [preds[i] for i in post_rows], k,
-            [float(ests[i]) for i in post_rows], alive=alive_base,
-        )
-        rounds[post_rows] = rnd
-        groups = {}
-        for j, i in enumerate(post_rows):
-            groups.setdefault(preds[i], []).append(j)
-        for pred, js in groups.items():
-            finish([post_rows[j] for j in js], pred, d[js], ids[js])
+        with tr.span("group", decision="post", backend="ivf", knob="adapt",
+                     n_rows=len(post_rows), live=True):
+            d, ids, rnd = post_exec.search_rows(
+                queries[post_rows], [preds[i] for i in post_rows], k,
+                [float(ests[i]) for i in post_rows], alive=alive_base,
+            )
+            rounds[post_rows] = rnd
+            groups = {}
+            for j, i in enumerate(post_rows):
+                groups.setdefault(preds[i], []).append(j)
+            for pred, js in groups.items():
+                finish([post_rows[j] for j in js], pred, d[js], ids[js])
+            if tr.enabled:
+                tr.annotate(expansion_rounds=int(np.asarray(rnd).sum()))
     if routed:
         groups = {}
         for i in range(b):
@@ -293,10 +353,15 @@ def _live_execute_grouped(
         mask_ex = ipre_exec or pre_exec
         base_masks: dict = {}
         for (ci, pred), rows in groups.items():
-            if pred not in base_masks:
-                base_masks[pred] = mask_ex.candidate_mask(pred)[:base_n] & alive_base
-            d, ids = backend_set.search_class(ci, queries[rows], base_masks[pred], k)
-            finish(rows, pred, d[:, :k], ids[:, :k])
+            bk, knob = backend_set.classes()[ci]
+            with tr.span("group", decision="post", backend=str(bk),
+                         knob=str(knob), n_rows=len(rows), live=True):
+                if pred not in base_masks:
+                    base_masks[pred] = mask_ex.candidate_mask(pred)[:base_n] & alive_base
+                d, ids = backend_set.search_class(ci, queries[rows], base_masks[pred], k)
+                if tr.enabled:
+                    tr.annotate(n_candidates=int(base_masks[pred].sum()))
+                finish(rows, pred, d[:, :k], ids[:, :k])
     return out_d, out_i, rounds
 
 
@@ -480,6 +545,7 @@ class CorpusShard:
         decisions: np.ndarray,
         ests: np.ndarray,
         routes: Optional[np.ndarray] = None,
+        tracer=None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Run a whole planned batch on this shard (decision-grouped, same
         shared ``_execute_grouped`` core as
@@ -490,13 +556,13 @@ class CorpusShard:
             out_d, out_i, rounds = _live_execute_grouped(
                 self.pre_exec, self.ipre_exec, self.post_exec,
                 queries, preds, k, decisions, ests, self.live,
-                routes=routes, backend_set=self.backend_set,
+                routes=routes, backend_set=self.backend_set, tracer=tracer,
             )
         else:
             out_d, out_i, rounds = _execute_grouped(
                 self.pre_exec, self.ipre_exec, self.post_exec,
                 queries, preds, k, decisions, ests,
-                routes=routes, backend_set=self.backend_set,
+                routes=routes, backend_set=self.backend_set, tracer=tracer,
             )
         return out_d, self._to_global(out_i), rounds
 
@@ -568,6 +634,10 @@ class FilteredANNEngine:
             max_segment_frac=self.config.max_segment_frac,
             max_list_drift=self.config.max_list_drift,
         )
+        # observability: the no-op tracer by default, an installed one kept
+        # across compaction rebuilds (compact() re-runs build_stats) the
+        # same way the trained heads survive
+        self.tracer = getattr(self, "tracer", NULL_TRACER)
         self.build_time_["stats"] = t1 - t0
         self.build_time_["attr_index"] = t2 - t1
         return self
@@ -742,18 +812,44 @@ class FilteredANNEngine:
             planner.decide(np.zeros(planner.n_features, np.float32))
         return self
 
+    def set_tracer(self, tracer) -> "FilteredANNEngine":
+        """Install an :class:`repro.obs.trace.Tracer` on every serving path
+        (``None`` restores the no-op default)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        return self
+
+    @staticmethod
+    def _hit_ratio(hits: int, misses: int) -> float:
+        total = hits + misses
+        return round(hits / total, 6) if total else 0.0
+
     def stats(self) -> dict:
         """Public serving-counter accessor: predicate-cache hit/miss/eviction
         stats, plan-cache stats, and the planner head version — previously
         only reachable by poking engine internals.  (Dataset statistics
-        live on ``self.dataset_stats``.)"""
+        live on ``self.dataset_stats``.)
+
+        ``kernel_dispatch`` mirrors the process-global per-kernel dispatch
+        counts (``repro.kernels.ops``) — cumulative across every engine in
+        the process, so tests diff it around the call under measurement —
+        and ``cache_hit_ratio`` summarises the three serving caches."""
         out: dict = {"planner_version": getattr(self, "planner_version", 0)}
+        ratios: dict = {}
         pred_cache = getattr(self, "pred_cache", None)
         if pred_cache is not None:
-            out["pred_cache"] = pred_cache.stats()
+            s = pred_cache.stats()
+            out["pred_cache"] = s
+            ratios["pred_cache"] = self._hit_ratio(s["hits"], s["misses"])
+            ratios["mask_tier"] = self._hit_ratio(s["mask_hits"], s["mask_misses"])
         plan_cache = getattr(self, "plan_cache", None)
         if plan_cache is not None:
-            out["plan_cache"] = plan_cache.stats()
+            s = plan_cache.stats()
+            out["plan_cache"] = s
+            ratios["plan_cache"] = self._hit_ratio(s["hits"], s["misses"])
+        out["cache_hit_ratio"] = ratios
+        from ..kernels import ops as _kops
+
+        out["kernel_dispatch"] = _kops.dispatch_counts()
         out["corpus_generation"] = getattr(self, "corpus_generation", 0)
         out["n_compactions"] = getattr(self, "n_compactions", 0)
         live = getattr(self, "live", None)
@@ -784,24 +880,27 @@ class FilteredANNEngine:
         v = np.atleast_2d(np.asarray(vectors, np.float32))
         c = np.atleast_2d(np.asarray(cat))
         m = np.atleast_2d(np.asarray(num))
-        removed_cat = removed_num = None
-        if ids is not None:
-            old = np.unique(np.asarray(ids, np.int64))
-            old = old[~self.live.is_deleted(old)]
-            if old.size:      # attrs of the rows about to be tombstoned
-                removed_cat, removed_num = self.live.row_attrs(old)
-        handles = self.live.upsert(v, c, m, ids=ids)
-        if self.attr_index is not None:
-            self.attr_index.extend(c, m)
-            self.pred_cache.invalidate()
-        self.dataset_stats.apply_delta(
-            added_cat=c, added_num=m,
-            removed_cat=removed_cat, removed_num=removed_num,
-        )
-        ivf = getattr(self, "ivf", None)
-        if ivf is not None:   # keep the drift trigger's assignments current
-            self.live.assign_new(ivf.centroids)
-        self.corpus_generation += 1
+        tr = getattr(self, "tracer", NULL_TRACER)
+        with tr.span("write", op="upsert", n_rows=int(v.shape[0])):
+            removed_cat = removed_num = None
+            if ids is not None:
+                old = np.unique(np.asarray(ids, np.int64))
+                old = old[~self.live.is_deleted(old)]
+                if old.size:      # attrs of the rows about to be tombstoned
+                    removed_cat, removed_num = self.live.row_attrs(old)
+            handles = self.live.upsert(v, c, m, ids=ids)
+            if self.attr_index is not None:
+                self.attr_index.extend(c, m)
+                self.pred_cache.invalidate()
+            self.dataset_stats.apply_delta(
+                added_cat=c, added_num=m,
+                removed_cat=removed_cat, removed_num=removed_num,
+            )
+            ivf = getattr(self, "ivf", None)
+            if ivf is not None:   # keep the drift trigger's assignments current
+                self.live.assign_new(ivf.centroids)
+            self.corpus_generation += 1
+            tr.annotate(corpus_generation=self.corpus_generation)
         return handles
 
     def delete(self, ids: np.ndarray) -> np.ndarray:
@@ -810,11 +909,15 @@ class FilteredANNEngine:
         into every candidate mask, backend call, and exact-selectivity
         popcount at query time — but statistics fold the removal in and
         the plan epoch bumps."""
-        fresh = self.live.delete(ids)
-        if fresh.size:
-            rc, rn = self.live.row_attrs(fresh)
-            self.dataset_stats.apply_delta(removed_cat=rc, removed_num=rn)
-        self.corpus_generation += 1
+        tr = getattr(self, "tracer", NULL_TRACER)
+        with tr.span("write", op="delete"):
+            fresh = self.live.delete(ids)
+            if fresh.size:
+                rc, rn = self.live.row_attrs(fresh)
+                self.dataset_stats.apply_delta(removed_cat=rc, removed_num=rn)
+            self.corpus_generation += 1
+            tr.annotate(n_dead=int(fresh.size),
+                        corpus_generation=self.corpus_generation)
         return fresh
 
     def list_drift(self) -> float:
@@ -851,22 +954,27 @@ class FilteredANNEngine:
         re-derived).  Generation counters bump so every cache invalidates.
         Returns ``id_map``: old handle -> new position (-1 for dead)."""
         t0 = time.perf_counter()
-        vectors, cat, num, id_map = self.live.compacted()
-        planner, head_version = self.planner, self.planner_version
-        est_model, est_gen = self.estimator.model, self.estimator.generation
-        gen, n_comp = self.corpus_generation, self.n_compactions
-        full = getattr(self, "pre_exec", None) is not None
-        self.vectors, self.cat, self.num = vectors, cat, num
-        if full:
-            self.build()
-        else:
-            self.build_stats()      # planning-only engines stay planning-only
-        self.planner = planner
-        self.planner_version = head_version + 1
-        self.estimator.model = est_model
-        self.estimator.generation = est_gen + 1
-        self.corpus_generation = gen + 1
-        self.n_compactions = n_comp + 1
+        tr = getattr(self, "tracer", NULL_TRACER)
+        with tr.span("compact"):
+            vectors, cat, num, id_map = self.live.compacted()
+            planner, head_version = self.planner, self.planner_version
+            est_model, est_gen = self.estimator.model, self.estimator.generation
+            gen, n_comp = self.corpus_generation, self.n_compactions
+            full = getattr(self, "pre_exec", None) is not None
+            self.vectors, self.cat, self.num = vectors, cat, num
+            if full:
+                self.build()
+            else:
+                self.build_stats()  # planning-only engines stay planning-only
+            self.planner = planner
+            self.planner_version = head_version + 1
+            self.estimator.model = est_model
+            self.estimator.generation = est_gen + 1
+            self.corpus_generation = gen + 1
+            self.n_compactions = n_comp + 1
+            tr.annotate(n_rows=int(vectors.shape[0]),
+                        n_compactions=self.n_compactions,
+                        corpus_generation=self.corpus_generation)
         self.build_time_["compaction"] = time.perf_counter() - t0
         return id_map
 
@@ -921,13 +1029,21 @@ class FilteredANNEngine:
         ``route`` is the (backend, knob-tier) class index for post-filter
         rows when the routing head is active, else ``NO_ROUTE``."""
         t0 = time.perf_counter()
-        self.plan_cache.validate_epoch(self._plan_epoch())
-        key = (self._plan_key(pred), int(k))
-        hit = self.plan_cache.get(key)
-        if hit is not None:
-            return hit[0], hit[1], hit[2], time.perf_counter() - t0
-        est, decision, route = self._plan_cold(pred, k)
-        self.plan_cache.put(key, (est, decision, route))
+        tr = getattr(self, "tracer", NULL_TRACER)
+        with tr.span("plan", k=int(k)):
+            self.plan_cache.validate_epoch(self._plan_epoch())
+            key = (self._plan_key(pred), int(k))
+            hit = self.plan_cache.get(key)
+            if hit is not None:
+                tr.annotate(plan_cache="hit",
+                            decision=STRATEGY_NAMES[int(hit[1])],
+                            route=int(hit[2]))
+                return hit[0], hit[1], hit[2], time.perf_counter() - t0
+            est, decision, route = self._plan_cold(pred, k)
+            self.plan_cache.put(key, (est, decision, route))
+            tr.annotate(plan_cache="miss",
+                        decision=STRATEGY_NAMES[int(decision)],
+                        route=int(route))
         return est, decision, route, time.perf_counter() - t0
 
     def _class_names(self) -> Optional[Tuple[str, ...]]:
@@ -972,7 +1088,18 @@ class FilteredANNEngine:
                 getattr(self, "corpus_generation", 0))
 
     def _plan_cold(self, pred: AnyPredicate, k: int) -> Tuple[float, int, int]:
-        est, exact = self.estimator.estimate_ex(pred)
+        tr = getattr(self, "tracer", NULL_TRACER)
+        with tr.span("predicate_compile"):
+            pc = getattr(self, "pred_cache", None)
+            m0 = pc.misses if pc is not None else 0
+            est, exact = self.estimator.estimate_ex(pred)
+            if tr.enabled:
+                tr.annotate(estimator="exact" if exact else "gbm")
+                if pc is not None:
+                    miss = pc.misses - m0
+                    n_words = (self.vectors.shape[0] + 31) // 32
+                    tr.annotate(pred_cache="miss" if miss else "hit",
+                                bitmap_words=miss * n_words)
         fv = self.feat.vector(pred, est, k, exact)
         if self.planner.params:
             decision = int(self.planner.decide(fv)[0])
@@ -1010,42 +1137,59 @@ class FilteredANNEngine:
         """Batched :meth:`plan_ex`: additionally returns per-row routing
         classes (``NO_ROUTE`` for non-post rows or when routing is off)."""
         t0 = time.perf_counter()
-        self.plan_cache.validate_epoch(self._plan_epoch())
+        tr = getattr(self, "tracer", NULL_TRACER)
         b = len(preds)
-        ests = np.zeros(b, np.float64)
-        decisions = np.zeros(b, np.int32)
-        routes = np.full(b, NO_ROUTE, np.int32)
-        keys = [(self._plan_key(p), int(k)) for p in preds]
-        miss = []
-        for i, key in enumerate(keys):
-            hit = self.plan_cache.get(key)
-            if hit is None:
-                miss.append(i)
-            else:
-                ests[i], decisions[i], routes[i] = hit
-        if miss:
-            sub = [preds[i] for i in miss]
-            m_ests, m_exact = self.estimator.estimate_batch_ex(sub)
-            fm = self.feat.matrix(sub, m_ests, k, m_exact)
-            if self.planner.params:
-                m_dec = self.planner.decide(fm).astype(np.int32)
-            else:
-                m_dec = np.where(m_ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
-                m_dec = np.where(
-                    (m_dec == PRE_FILTER) & m_exact, INDEXED_PRE, m_dec
-                ).astype(np.int32)
-            m_routes = np.full(len(miss), NO_ROUTE, np.int32)
-            if self._routing_active():
-                r = self.planner.route(fm)
-                if r is not None:
-                    m_routes = np.where(m_dec == POST_FILTER, r, NO_ROUTE).astype(np.int32)
-            for j, i in enumerate(miss):
-                ests[i], decisions[i], routes[i] = (
-                    float(m_ests[j]), int(m_dec[j]), int(m_routes[j])
-                )
-                self.plan_cache.put(
-                    keys[i], (float(m_ests[j]), int(m_dec[j]), int(m_routes[j]))
-                )
+        with tr.span("plan", n_preds=b, k=int(k)):
+            self.plan_cache.validate_epoch(self._plan_epoch())
+            ests = np.zeros(b, np.float64)
+            decisions = np.zeros(b, np.int32)
+            routes = np.full(b, NO_ROUTE, np.int32)
+            keys = [(self._plan_key(p), int(k)) for p in preds]
+            miss = []
+            for i, key in enumerate(keys):
+                hit = self.plan_cache.get(key)
+                if hit is None:
+                    miss.append(i)
+                else:
+                    ests[i], decisions[i], routes[i] = hit
+            if miss:
+                sub = [preds[i] for i in miss]
+                with tr.span("predicate_compile", n_preds=len(miss)):
+                    pc = getattr(self, "pred_cache", None)
+                    m0 = pc.misses if pc is not None else 0
+                    m_ests, m_exact = self.estimator.estimate_batch_ex(sub)
+                    if tr.enabled:
+                        tr.annotate(
+                            estimator_exact=int(np.asarray(m_exact).sum()),
+                            estimator_gbm=len(miss) - int(np.asarray(m_exact).sum()),
+                        )
+                        if pc is not None:
+                            md = pc.misses - m0
+                            n_words = (self.vectors.shape[0] + 31) // 32
+                            tr.annotate(pred_cache_misses=md,
+                                        bitmap_words=md * n_words)
+                fm = self.feat.matrix(sub, m_ests, k, m_exact)
+                if self.planner.params:
+                    m_dec = self.planner.decide(fm).astype(np.int32)
+                else:
+                    m_dec = np.where(m_ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
+                    m_dec = np.where(
+                        (m_dec == PRE_FILTER) & m_exact, INDEXED_PRE, m_dec
+                    ).astype(np.int32)
+                m_routes = np.full(len(miss), NO_ROUTE, np.int32)
+                if self._routing_active():
+                    r = self.planner.route(fm)
+                    if r is not None:
+                        m_routes = np.where(m_dec == POST_FILTER, r, NO_ROUTE).astype(np.int32)
+                for j, i in enumerate(miss):
+                    ests[i], decisions[i], routes[i] = (
+                        float(m_ests[j]), int(m_dec[j]), int(m_routes[j])
+                    )
+                    self.plan_cache.put(
+                        keys[i], (float(m_ests[j]), int(m_dec[j]), int(m_routes[j]))
+                    )
+            tr.annotate(plan_cache_hits=b - len(miss),
+                        plan_cache_misses=len(miss))
         return ests, decisions, routes, time.perf_counter() - t0
 
     def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:
@@ -1106,36 +1250,46 @@ class FilteredANNEngine:
         """Plan + execute one filtered ANN query."""
         q = np.atleast_2d(q)
         est, decision, route, plan_overhead = self.plan_ex(pred, k)
+        tr = getattr(self, "tracer", NULL_TRACER)
         live = getattr(self, "live", None)
         if live is not None and live.dirty:
             # mutated corpus: the tombstone/segment-composing executor
             t0 = time.perf_counter()
             decisions = np.array([decision], np.int32)
             routes = np.array([route], np.int32)
-            d, ids, rounds = _live_execute_grouped(
-                self.pre_exec, self.ipre_exec, self.post_exec,
-                q, [pred], k, decisions, np.array([est]), live,
-                routes=routes, backend_set=self.backend_set,
-            )
+            with tr.span("execute", n_queries=1, k=int(k), live=True):
+                kc0, kw0 = _kernel_snapshot() if tr.enabled else ({}, {})
+                d, ids, rounds = _live_execute_grouped(
+                    self.pre_exec, self.ipre_exec, self.post_exec,
+                    q, [pred], k, decisions, np.array([est]), live,
+                    routes=routes, backend_set=self.backend_set, tracer=tr,
+                )
+                if tr.enabled:
+                    _annotate_kernel_delta(tr, kc0, kw0)
             share = time.perf_counter() - t0 + plan_overhead
             return package_results(
                 d, ids, rounds, np.array([est]), decisions, share,
                 plan_overhead, route_names=self._route_names(decisions, routes),
             )[0]
-        if decision == INDEXED_PRE:
-            res = self.ipre_exec.search(q, pred, k)
-        elif decision == PRE_FILTER:
-            res = self.pre_exec.search(q, pred, k)
-        elif route >= 0 and self.backend_set is not None:
-            # routed: mask once (bitmap-indexed when covered), then the
-            # chosen backend's masked search at the chosen knob tier
-            t0 = time.perf_counter()
-            mask = self.ipre_exec.candidate_mask(pred)
-            d, ids = self.backend_set.search_class(route, q, mask, k)
-            res = SearchResult(d, ids, time.perf_counter() - t0, "post")
-        else:
-            # the estimate also *parameterises* the chosen executor
-            res = self.post_exec.search(q, pred, k, est_selectivity=est)
+        with tr.span("execute", n_queries=1, k=int(k), live=False,
+                     decision=STRATEGY_NAMES[decision]):
+            kc0, kw0 = _kernel_snapshot() if tr.enabled else ({}, {})
+            if decision == INDEXED_PRE:
+                res = self.ipre_exec.search(q, pred, k)
+            elif decision == PRE_FILTER:
+                res = self.pre_exec.search(q, pred, k)
+            elif route >= 0 and self.backend_set is not None:
+                # routed: mask once (bitmap-indexed when covered), then the
+                # chosen backend's masked search at the chosen knob tier
+                t0 = time.perf_counter()
+                mask = self.ipre_exec.candidate_mask(pred)
+                d, ids = self.backend_set.search_class(route, q, mask, k)
+                res = SearchResult(d, ids, time.perf_counter() - t0, "post")
+            else:
+                # the estimate also *parameterises* the chosen executor
+                res = self.post_exec.search(q, pred, k, est_selectivity=est)
+            if tr.enabled:
+                _annotate_kernel_delta(tr, kc0, kw0)
         if not res.backend:
             if decision == POST_FILTER and route >= 0 and self.backend_set is not None:
                 res.backend, res.knob = self.backend_set.classes()[route]
@@ -1179,18 +1333,24 @@ class FilteredANNEngine:
         plan_share = plan_overhead / max(b, 1)
         t0 = time.perf_counter()
         live = getattr(self, "live", None)
-        if live is not None and live.dirty:
-            d, ids, rounds = _live_execute_grouped(
-                self.pre_exec, self.ipre_exec, self.post_exec,
-                queries, preds, k, decisions, ests, live,
-                routes=routes, backend_set=self.backend_set,
-            )
-        else:
-            d, ids, rounds = _execute_grouped(
-                self.pre_exec, self.ipre_exec, self.post_exec,
-                queries, preds, k, decisions, ests,
-                routes=routes, backend_set=self.backend_set,
-            )
+        tr = getattr(self, "tracer", NULL_TRACER)
+        with tr.span("execute", n_queries=b, k=int(k),
+                     live=bool(live is not None and live.dirty)):
+            kc0, kw0 = _kernel_snapshot() if tr.enabled else ({}, {})
+            if live is not None and live.dirty:
+                d, ids, rounds = _live_execute_grouped(
+                    self.pre_exec, self.ipre_exec, self.post_exec,
+                    queries, preds, k, decisions, ests, live,
+                    routes=routes, backend_set=self.backend_set, tracer=tr,
+                )
+            else:
+                d, ids, rounds = _execute_grouped(
+                    self.pre_exec, self.ipre_exec, self.post_exec,
+                    queries, preds, k, decisions, ests,
+                    routes=routes, backend_set=self.backend_set, tracer=tr,
+                )
+            if tr.enabled:
+                _annotate_kernel_delta(tr, kc0, kw0)
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
         return package_results(d, ids, rounds, ests, decisions, share, plan_share,
                                route_names=self._route_names(decisions, routes))

@@ -63,6 +63,11 @@ class PredicateCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        # mask-tier split (subset of hits/misses above): the obs layer's
+        # cache_hit_ratio gauge tracks the expanded-mask tier separately,
+        # since a mask-tier miss still costs an O(N/8) re-expansion
+        self.mask_hits = 0
+        self.mask_misses = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -91,6 +96,7 @@ class PredicateCache:
         key = canonical_key(pred)
         m = self._masks.get(key)
         if m is None:
+            self.mask_misses += 1
             c = self.get_or_compile(pred, index)
             m = expand_words(c.words, c.n)
             self._masks[key] = m
@@ -99,6 +105,7 @@ class PredicateCache:
         else:
             self._masks.move_to_end(key)
             self.hits += 1
+            self.mask_hits += 1
         return m
 
     def invalidate(self) -> None:
@@ -120,9 +127,12 @@ class PredicateCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "mask_hits": self.mask_hits,
+            "mask_misses": self.mask_misses,
         }
 
     def clear(self) -> None:
         self._store.clear()
         self._masks.clear()
         self.hits = self.misses = self.evictions = 0
+        self.mask_hits = self.mask_misses = 0

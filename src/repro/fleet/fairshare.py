@@ -120,13 +120,17 @@ class FleetRuntime:
                  service: Optional[FleetServiceModel] = None,
                  admission: Optional[AdmissionController] = None,
                  autoscale: Optional[AutoscaleConfig] = None,
-                 faults: Optional[List[FaultInjection]] = None):
+                 faults: Optional[List[FaultInjection]] = None,
+                 tracer=None):
         self.fleet = fleet
         self.config = config or FleetConfig()
         self.service = service or FleetServiceModel()
         self.admission = admission
         self.autoscale = autoscale
         self.faults = sorted(faults or [], key=lambda f: (f.t, f.tenant, f.shard))
+        # optional repro.obs.Tracer: installed on every tenant backend for
+        # the run; per flushed batch one root span with per-tenant children
+        self.tracer = tracer
 
     # ------------------------------------------------------------------
     def _next_flush(self, queues: Dict[str, RequestQueue], now: float):
@@ -189,8 +193,16 @@ class FleetRuntime:
     def run_trace(self, trace: ArrivalTrace,
                   telemetry: Optional[FleetTelemetry] = None) -> FleetReport:
         """Replay one multi-tenant arrival trace to completion."""
+        from ..obs.trace import NULL_TRACER
+
         cfg = self.config
         tel = telemetry or FleetTelemetry()
+        tr = self.tracer if self.tracer is not None else NULL_TRACER
+        if self.tracer is not None:
+            for nm in self.fleet.names():
+                backend = self.fleet[nm].backend
+                if hasattr(backend, "set_tracer"):
+                    backend.set_tracer(self.tracer)
         self.fleet.reset_shards()
         if self.admission is not None:
             self.admission.reset()
@@ -253,41 +265,45 @@ class FleetRuntime:
             service = self.service.dispatch
             executed = []      # (tenant, reads, res, n_up, n_del, n_comp, group_s)
             w0 = time.perf_counter()
-            for nm, greqs in groups:
-                if not greqs:
-                    continue
-                col = self.fleet[nm]
-                writes = sorted((r for r in greqs if r.op != "query"),
-                                key=lambda r: r.rid)
-                reads = [r for r in greqs if r.op == "query"]
-                n_up = n_del = n_comp = 0
-                for r in writes:
-                    if r.op == "upsert":
-                        col.upsert(*r.payload)
-                        n_up += len(r.payload[0])
-                    else:
-                        col.delete(*r.payload)
-                        n_del += len(r.payload[0])
-                if writes and col.maybe_compact() is not None:
-                    n_comp = 1
-                res: List[Optional[PlannedResult]] = [None] * len(reads)
-                if reads:
-                    q = np.stack([r.query for r in reads]).astype(np.float32)
-                    by_k: Dict[int, List[int]] = {}
-                    for j, r in enumerate(reads):
-                        by_k.setdefault(r.k, []).append(j)
-                    for k, rows in by_k.items():
-                        out = col.batch_query(
-                            q[rows], [reads[j].pred for j in rows], k)
-                        for j, r in zip(rows, out):
-                            res[j] = r
-                group_s = self.service.time_group(
-                    [r.decision for r in res], col.n_shards,
-                    n_upsert_rows=n_up, n_delete_rows=n_del,
-                    n_compactions=n_comp)
-                service += group_s
-                executed.append((nm, writes, reads, res, n_up, n_del, n_comp,
-                                 group_s))
+            with tr.span("batch", n_rows=len(batch),
+                         deadline_flush=bool(deadline_flush)):
+                for nm, greqs in groups:
+                    if not greqs:
+                        continue
+                    col = self.fleet[nm]
+                    writes = sorted((r for r in greqs if r.op != "query"),
+                                    key=lambda r: r.rid)
+                    reads = [r for r in greqs if r.op == "query"]
+                    with tr.span("tenant_group", tenant=nm,
+                                 n_reads=len(reads), n_writes=len(writes)):
+                        n_up = n_del = n_comp = 0
+                        for r in writes:
+                            if r.op == "upsert":
+                                col.upsert(*r.payload)
+                                n_up += len(r.payload[0])
+                            else:
+                                col.delete(*r.payload)
+                                n_del += len(r.payload[0])
+                        if writes and col.maybe_compact() is not None:
+                            n_comp = 1
+                        res: List[Optional[PlannedResult]] = [None] * len(reads)
+                        if reads:
+                            q = np.stack([r.query for r in reads]).astype(np.float32)
+                            by_k: Dict[int, List[int]] = {}
+                            for j, r in enumerate(reads):
+                                by_k.setdefault(r.k, []).append(j)
+                            for k, rows in by_k.items():
+                                out = col.batch_query(
+                                    q[rows], [reads[j].pred for j in rows], k)
+                                for j, r in zip(rows, out):
+                                    res[j] = r
+                    group_s = self.service.time_group(
+                        [r.decision for r in res], col.n_shards,
+                        n_upsert_rows=n_up, n_delete_rows=n_del,
+                        n_compactions=n_comp)
+                    service += group_s
+                    executed.append((nm, writes, reads, res, n_up, n_del,
+                                     n_comp, group_s))
             wall = time.perf_counter() - w0
             t_complete = now + service
             busy_until = t_complete

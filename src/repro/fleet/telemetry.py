@@ -13,25 +13,39 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
+from ..obs.metrics import MetricsRegistry
 from ..runtime.telemetry import Telemetry
 
 __all__ = ["FleetTelemetry"]
 
 
 class FleetTelemetry:
-    def __init__(self):
+    """All tenants publish into ONE shared :class:`MetricsRegistry`: each
+    per-tenant :class:`Telemetry` carries a ``tenant`` label, so one
+    ``registry.prometheus_text()`` / ``registry.snapshot()`` call exports
+    the whole fleet with tenant isolation intact."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.tenants: Dict[str, Telemetry] = {}
-        self.rejects: Dict[str, int] = {}
         self.scale_events: List[dict] = []
 
     def tenant(self, name: str) -> Telemetry:
         if name not in self.tenants:
-            self.tenants[name] = Telemetry()
+            self.tenants[name] = Telemetry(
+                registry=self.registry, labels={"tenant": name})
         return self.tenants[name]
 
     # ------------------------------------------------------------------
     def record_reject(self, tenant: str) -> None:
-        self.rejects[tenant] = self.rejects.get(tenant, 0) + 1
+        self.registry.inc("repro_admission_rejected_total", tenant=tenant)
+
+    @property
+    def rejects(self) -> Dict[str, int]:
+        return {
+            lbl["tenant"]: int(v)
+            for lbl, v in self.registry.series("repro_admission_rejected_total")
+        }
 
     def record_scale(self, event) -> None:
         """``event`` is an ``autoscale.ScaleEvent`` (or any dataclass with

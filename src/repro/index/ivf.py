@@ -12,6 +12,7 @@ semantics:
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Optional, Tuple
 
@@ -113,6 +114,11 @@ class IVFIndex:
                 np.concatenate([p[0] for p in parts]),
                 np.concatenate([p[1] for p in parts]),
             )
+        # dispatch ledger for the obs layer: one record per actual scan
+        # (chunked calls record in the leaves, not the splitting parent)
+        from ..kernels.ops import record_dispatch
+
+        t0 = time.perf_counter()
         # query -> centroid distances.  Same fixed-shape GEMM discipline as
         # the list scans below — every call is (L, d) @ (d, 8) regardless of
         # batch size, so probe selection is batch-invariant too.
@@ -135,6 +141,7 @@ class IVFIndex:
         totals = counts.sum(1)                                          # (B,)
         c = int(totals.max()) if b else 0
         if c == 0:
+            record_dispatch("ivf_search", time.perf_counter() - t0)
             return out_d, out_i
         # ragged probe segments -> right-padded (B, C) sorted-row indices,
         # preserving per-row segment order (flat repeat/cumsum construction,
@@ -204,6 +211,7 @@ class IVFIndex:
         fin = np.isfinite(sd)
         out_d[:, :kk] = np.where(fin, sd, np.inf)
         out_i[:, :kk] = np.where(fin, si, -1)
+        record_dispatch("ivf_search", time.perf_counter() - t0)
         return out_d, out_i
 
     # ------------------------------------------------------------------

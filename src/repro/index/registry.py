@@ -32,6 +32,7 @@ the planner's routing head indexes into.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Mapping, Optional, Protocol, Sequence, Tuple
@@ -451,8 +452,13 @@ class BackendSet:
     def search_class(self, ci: int, queries: np.ndarray,
                      mask: Optional[np.ndarray], k: int):
         bname, _ = self._classes[ci]
-        return self.backends[bname].search_masked(queries, mask, k,
-                                                  knobs=self._knobs[ci])
+        from ..kernels.ops import record_dispatch
+
+        t0 = time.perf_counter()
+        out = self.backends[bname].search_masked(queries, mask, k,
+                                                 knobs=self._knobs[ci])
+        record_dispatch(f"backend_{bname}", time.perf_counter() - t0)
+        return out
 
     def memory_bytes(self) -> Dict[str, int]:
         return {nm: b.memory_bytes() for nm, b in self.backends.items()}

@@ -6,8 +6,9 @@ signature as the :mod:`repro.kernels.ref` oracles.  ``interpret=None`` means
 """
 from __future__ import annotations
 
+import time
 from functools import partial
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +16,60 @@ import jax.numpy as jnp
 from .decode_attention import TS, decode_attention_kernel
 from .masked_l2 import KPAD, TN, TQ, masked_l2_topk_kernel
 
-__all__ = ["masked_l2_topk", "decode_attention", "fused_masked_topk"]
+__all__ = [
+    "masked_l2_topk", "decode_attention", "fused_masked_topk",
+    "record_dispatch", "dispatch_counts", "dispatch_wall",
+    "reset_dispatch_stats", "vmem_working_set",
+]
+
+# ----------------------------------------------------------------------
+# process-global dispatch ledger — the obs layer's kernel counters.
+# Counts live OUTSIDE the jit'd functions (a counter inside a traced
+# function only runs at trace time), in the plain-Python wrappers that
+# every serving dispatch goes through: ``fused_masked_topk`` here,
+# ``IVFIndex.search`` and ``BackendSet.search_class`` at their call
+# sites.  Counts are deterministic per trace; wall seconds are the real
+# ledger (dispatch-call time — device sync happens at the caller's
+# ``np.asarray``).
+# ----------------------------------------------------------------------
+_DISPATCH_COUNTS: Dict[str, int] = {}
+_DISPATCH_WALL: Dict[str, float] = {}
+
+
+def record_dispatch(name: str, seconds: float = 0.0) -> None:
+    _DISPATCH_COUNTS[name] = _DISPATCH_COUNTS.get(name, 0) + 1
+    _DISPATCH_WALL[name] = _DISPATCH_WALL.get(name, 0.0) + float(seconds)
+
+
+def dispatch_counts() -> Dict[str, int]:
+    return {k: _DISPATCH_COUNTS[k] for k in sorted(_DISPATCH_COUNTS)}
+
+
+def dispatch_wall() -> Dict[str, float]:
+    return {k: _DISPATCH_WALL[k] for k in sorted(_DISPATCH_WALL)}
+
+
+def reset_dispatch_stats() -> None:
+    _DISPATCH_COUNTS.clear()
+    _DISPATCH_WALL.clear()
+
+
+def vmem_working_set(d: int) -> dict:
+    """Analytic bytes resident in VMEM for one (query-tile, corpus-tile)
+    step of the fused masked top-k — the 16 MiB v5e fit check shared by
+    ``benchmarks/kernel_bench.py`` and the obs snapshot
+    (``repro.obs.metrics.publish_kernel_budget``)."""
+    q_tile = TQ * d * 4
+    x_tile = TN * d * 4
+    mask = TN * 4
+    dist_block = TQ * TN * 4
+    topk_scratch = 2 * TQ * KPAD * 4
+    total = q_tile + x_tile + mask + dist_block + topk_scratch
+    return {
+        "q_tile": q_tile, "x_tile": x_tile, "dist_block": dist_block,
+        "scratch": topk_scratch, "total": total,
+        "fits_16MiB": total < 16 * 2**20,
+    }
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -72,11 +126,15 @@ def fused_masked_topk(
     call hits; wider pow2 batch shapes (16, 32, ...) compile once on first
     use and are cached for the rest of the process.
     """
+    t0 = time.perf_counter()
     if jax.default_backend() == "tpu" and k <= KPAD:
-        return masked_l2_topk(queries, corpus, mask, k)
-    from ..index.flat import l2_topk
+        out = masked_l2_topk(queries, corpus, mask, k)
+    else:
+        from ..index.flat import l2_topk
 
-    return l2_topk(queries, corpus, k, mask)
+        out = l2_topk(queries, corpus, k, mask)
+    record_dispatch("fused_masked_topk", time.perf_counter() - t0)
+    return out
 
 
 @partial(jax.jit, static_argnames=("interpret",))

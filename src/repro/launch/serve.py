@@ -57,6 +57,10 @@ def run_ann_trace(args) -> dict:
     from ..core import EngineConfig, FilteredANNEngine
     from ..core.trainer import gen_queries
     from ..data import make_dataset
+    from ..obs import (
+        RecallProbe, Tracer, publish_kernel_budget, publish_kernel_dispatch,
+        span_summary,
+    )
     from ..runtime import (
         FeedbackConfig, OnlineFeedback, OnlineRuntime, SchedulerConfig, make_trace,
     )
@@ -80,10 +84,15 @@ def run_ann_trace(args) -> dict:
     if args.feedback:
         feedback = OnlineFeedback(eng, FeedbackConfig(
             sample_rate=args.sample_rate, seed=args.seed))
+    tracer = Tracer()
+    probe = RecallProbe(rate=args.probe_rate, seed=args.seed) \
+        if args.probe_rate > 0 else None
     runtime = OnlineRuntime(
         backend,
         SchedulerConfig(max_batch=args.max_batch, max_wait=args.max_wait),
         feedback=feedback,
+        tracer=tracer,
+        probe=probe,
     )
     report = runtime.run_trace(trace)
     snap = report.telemetry.snapshot(backend)
@@ -102,6 +111,18 @@ def run_ann_trace(args) -> dict:
           f"speedup {naive_wall/max(wall, 1e-9):.2f}x")
     if feedback is not None:
         snap["feedback"] = feedback.stats()
+        feedback.publish(report.telemetry.registry)
+    if probe is not None:
+        snap["probe"] = probe.estimates()
+        probe.publish(report.telemetry.registry)
+    # kernel-side observability rides the same registry the runtime
+    # counters live in: one export surface for the whole serving stack
+    publish_kernel_dispatch(report.telemetry.registry)
+    publish_kernel_budget(report.telemetry.registry)
+    snap["span_summary"] = span_summary(tracer)
+    if args.trace_out:
+        tracer.write_jsonl(args.trace_out)
+        print(f"wrote {sum(1 for _ in tracer.spans())} spans to {args.trace_out}")
     print(json.dumps(snap, indent=2, default=float))
     return snap
 
@@ -131,6 +152,10 @@ def main(argv=None):
     ap.add_argument("--feedback", action="store_true",
                     help="enable the online planner feedback loop")
     ap.add_argument("--sample-rate", type=float, default=0.1)
+    ap.add_argument("--probe-rate", type=float, default=0.0,
+                    help="live recall-probe sampling rate (0 disables)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the span tree as JSONL to this path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.requests is None:

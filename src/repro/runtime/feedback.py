@@ -180,3 +180,10 @@ class OnlineFeedback:
             "refits": self.n_refits,
             "swaps": self.n_swaps,
         }
+
+    def publish(self, registry, **labels) -> None:
+        """Export :meth:`stats` into a
+        :class:`repro.obs.metrics.MetricsRegistry` as
+        ``repro_feedback_*`` gauges."""
+        for key, v in self.stats().items():
+            registry.set_gauge(f"repro_feedback_{key}", v, **labels)

@@ -109,15 +109,25 @@ class OnlineRuntime:
     List[PlannedResult]`` — the flat :class:`FilteredANNEngine` or the
     sharded :class:`ShardedANNEngine` fan-out.  ``feedback`` (optional) is
     an :class:`OnlineFeedback` loop observing sampled outcomes and
-    refitting the planner between batches.
+    refitting the planner between batches.  ``tracer`` (optional,
+    :class:`repro.obs.Tracer`) is installed on the backend for the run:
+    each flushed micro-batch opens a root ``batch`` span over the
+    backend's plan/execute/write spans.  ``probe`` (optional,
+    :class:`repro.obs.RecallProbe`) races a seeded sample of served reads
+    against the exact oracle; its backend defaults to this runtime's.
     """
 
     def __init__(self, backend, config: Optional[SchedulerConfig] = None,
-                 service: Optional[ServiceModel] = None, feedback=None):
+                 service: Optional[ServiceModel] = None, feedback=None,
+                 tracer=None, probe=None):
         self.backend = backend
         self.config = config or SchedulerConfig()
         self.service = service or ServiceModel()
         self.feedback = feedback
+        self.tracer = tracer
+        self.probe = probe
+        if probe is not None and probe.backend is None:
+            probe.backend = backend
 
     # ------------------------------------------------------------------
     def _next_flush(self, queue: RequestQueue, now: float):
@@ -132,8 +142,13 @@ class OnlineRuntime:
     def run_trace(self, trace: ArrivalTrace, telemetry: Optional[Telemetry] = None,
                   ) -> RuntimeReport:
         """Replay one arrival trace to completion."""
+        from ..obs.trace import NULL_TRACER
+
         cfg = self.config
         tel = telemetry or Telemetry()
+        tr = self.tracer if self.tracer is not None else NULL_TRACER
+        if self.tracer is not None and hasattr(self.backend, "set_tracer"):
+            self.backend.set_tracer(self.tracer)
         queue = RequestQueue()
         reqs = sorted(trace.requests, key=lambda r: (r.t_arrival, r.rid))
         results: Dict[int, PlannedResult] = {}
@@ -174,29 +189,31 @@ class OnlineRuntime:
             reads = [r for r in batch if r.op == "query"]
             n_up = n_del = n_comp = 0
             w0 = time.perf_counter()
-            for r in writes:
-                if r.op == "upsert":
-                    self.backend.upsert(*r.payload)
-                    n_up += len(r.payload[0])
-                else:
-                    self.backend.delete(*r.payload)
-                    n_del += len(r.payload[0])
-            if writes and self.backend.maybe_compact() is not None:
-                n_comp = 1
             res: List[Optional[PlannedResult]] = [None] * len(reads)
-            if reads:
-                q = np.stack([r.query for r in reads]).astype(np.float32)
-                # the trace generators emit one k per trace; grouping by k
-                # here keeps mixed-k traces correct without complicating
-                # composition
-                by_k: Dict[int, List[int]] = {}
-                for j, r in enumerate(reads):
-                    by_k.setdefault(r.k, []).append(j)
-                for k, rows in by_k.items():
-                    out = self.backend.batch_query(
-                        q[rows], [reads[j].pred for j in rows], k)
-                    for j, r in zip(rows, out):
-                        res[j] = r
+            with tr.span("batch", n_reads=len(reads), n_writes=len(writes),
+                         deadline_flush=bool(deadline_flush)):
+                for r in writes:
+                    if r.op == "upsert":
+                        self.backend.upsert(*r.payload)
+                        n_up += len(r.payload[0])
+                    else:
+                        self.backend.delete(*r.payload)
+                        n_del += len(r.payload[0])
+                if writes and self.backend.maybe_compact() is not None:
+                    n_comp = 1
+                if reads:
+                    q = np.stack([r.query for r in reads]).astype(np.float32)
+                    # the trace generators emit one k per trace; grouping by
+                    # k here keeps mixed-k traces correct without
+                    # complicating composition
+                    by_k: Dict[int, List[int]] = {}
+                    for j, r in enumerate(reads):
+                        by_k.setdefault(r.k, []).append(j)
+                    for k, rows in by_k.items():
+                        out = self.backend.batch_query(
+                            q[rows], [reads[j].pred for j in rows], k)
+                        for j, r in zip(rows, out):
+                            res[j] = r
             tel.record_wall(time.perf_counter() - w0)
             service = self.service.time(
                 [r.decision for r in res],
@@ -210,6 +227,11 @@ class OnlineRuntime:
                 tel.record_batch(reads, res, now, t_complete, deadline_flush)
             for r_req, r_res in zip(reads, res):
                 results[r_req.rid] = r_res
+            if self.probe is not None:
+                # oracle races run OUTSIDE the batch span: probing is
+                # observability overhead, not serving work
+                for r_req, r_res in zip(reads, res):
+                    self.probe.observe(r_req, r_res)
             if self.feedback is not None:
                 for r_req, r_res in zip(reads, res):
                     self.feedback.observe(r_req, r_res)

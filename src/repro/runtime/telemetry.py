@@ -12,16 +12,25 @@ Two strictly separated ledgers:
   benchmarks).  Real clocks are never folded into the deterministic
   ledger.
 
-``snapshot()`` returns both; ``counters()`` returns only the deterministic
-part, which is what the replay tests compare.
+The counter ledger itself lives in a :class:`repro.obs.MetricsRegistry`
+(``self.registry``) under stable metric names (``repro_requests_total``,
+``repro_plan_total{plan=}``, ``repro_deadline_total{tier=,outcome=}``,
+...), so the same numbers export as a Prometheus text page or JSON
+snapshot with zero double-counting; a fleet shares ONE registry across
+tenants via a ``tenant`` label.  The legacy field/``counters()`` shapes
+are preserved exactly on top — replay tests compare them bit-for-bit.
+
+``snapshot()`` returns both ledgers; ``counters()`` returns only the
+deterministic part, which is what the replay tests compare.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from ..core.engine import PlannedResult, STRATEGY_NAMES
+from ..obs.metrics import MetricsRegistry
 from .queue import RuntimeRequest
 
 __all__ = ["Telemetry"]
@@ -40,52 +49,80 @@ def _quantiles(xs: List[float]) -> Dict[str, float]:
 
 
 class Telemetry:
-    """Accumulates runtime observations; ``snapshot()`` is the public API."""
+    """Accumulates runtime observations; ``snapshot()`` is the public API.
 
-    def __init__(self):
-        self.n_completed = 0
-        self.n_batches = 0
-        self.plan_counts: Dict[str, int] = {n: 0 for n in STRATEGY_NAMES.values()}
-        # backend-mix: routed (backend:knob) execution counts — strategy
-        # name stands in for rows executed before routing existed
-        self.backend_counts: Dict[str, int] = {}
-        self.batch_sizes: Dict[int, int] = {}
-        self.deadline_met: Dict[str, int] = {}
-        self.deadline_missed: Dict[str, int] = {}
-        self.deadline_flushes = 0           # batches flushed by SLO pressure
+    ``registry`` lets several telemetries share one
+    :class:`MetricsRegistry` (the fleet does, distinguishing tenants by
+    ``labels={"tenant": name}``); by default each instance owns a fresh
+    one.  Every legacy counter field (``plan_counts``, ``deadline_met``,
+    ...) is a property reading back the registry, so the two views can
+    never disagree.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 labels: Optional[Dict[str, str]] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.labels = dict(labels or {})
+        # pre-create the fixed enumerations at zero so snapshots show the
+        # full plan space before the first request lands
+        self._inc("repro_requests_total", 0)
+        self._inc("repro_batches_total", 0)
+        self._inc("repro_deadline_flush_total", 0)
+        self._inc("repro_compactions_total", 0)
+        for n in STRATEGY_NAMES.values():
+            self._inc("repro_plan_total", 0, plan=n)
+        for op in ("upsert", "delete"):
+            self._inc("repro_writes_total", 0, op=op)
+        # raw per-request VIRTUAL samples stay local: quantiles need the
+        # actual values, not histogram buckets (still deterministic)
         self._lat: Dict[str, List[float]] = {}   # virtual latency per tier
         self._queue_wait: List[float] = []       # virtual arrival -> flush
         self._fill: List[float] = []             # recall proxy: k-slots filled
         self._expansions: List[int] = []         # post-filter effort
-        # live-corpus write ledger (deterministic: counts derive from the
-        # trace composition, compactions from the backend's churn policy)
-        self.n_upserts = 0
-        self.n_deletes = 0
-        self.n_compactions = 0
         self.wall_exec_s = 0.0                   # measured (NOT deterministic)
 
-    # ------------------------------------------------------------------
+    # -- registry plumbing ---------------------------------------------
+    def _inc(self, name: str, value: float = 1, **labels) -> None:
+        self.registry.inc(name, value, **{**self.labels, **labels})
+
+    def _value(self, name: str, **labels) -> float:
+        return self.registry.value(name, 0, **{**self.labels, **labels})
+
+    def _label_map(self, name: str, key: str, **match) -> Dict[str, int]:
+        """``{series[key]: value}`` over this telemetry's series of a
+        metric (scoped to ``self.labels`` — tenant isolation on a shared
+        fleet registry)."""
+        out: Dict[str, int] = {}
+        for lbl, v in self.registry.series(name, match={**self.labels, **match}):
+            out[lbl[key]] = int(v)
+        return out
+
+    # -- recording ------------------------------------------------------
     def record_batch(self, reqs: List[RuntimeRequest], results: List[PlannedResult],
                      t_flush: float, t_complete: float,
                      deadline_flush: bool = False) -> None:
         """One executed micro-batch: per-request latency/deadline/plan
         accounting in VIRTUAL time plus batch-level counters."""
-        self.n_batches += 1
-        self.batch_sizes[len(reqs)] = self.batch_sizes.get(len(reqs), 0) + 1
+        self._inc("repro_batches_total")
+        self._inc("repro_batch_size_total", size=len(reqs))
         if deadline_flush:
-            self.deadline_flushes += 1
+            self._inc("repro_deadline_flush_total")
         for req, res in zip(reqs, results):
-            self.n_completed += 1
-            self.plan_counts[STRATEGY_NAMES[res.decision]] += 1
+            self._inc("repro_requests_total")
+            self._inc("repro_plan_total", plan=STRATEGY_NAMES[res.decision])
+            # backend-mix: routed (backend:knob) execution counts — strategy
+            # name stands in for rows executed before routing existed
             bk = getattr(res.result, "backend", "") or STRATEGY_NAMES[res.decision]
             knob = getattr(res.result, "knob", "")
-            key = f"{bk}:{knob}" if knob else bk
-            self.backend_counts[key] = self.backend_counts.get(key, 0) + 1
+            self._inc("repro_route_total",
+                      route=f"{bk}:{knob}" if knob else bk)
             lat = t_complete - req.t_arrival
             self._lat.setdefault(req.tier, []).append(lat)
+            self.registry.observe("repro_latency_virtual_seconds", lat,
+                                  tier=req.tier, **self.labels)
             self._queue_wait.append(t_flush - req.t_arrival)
-            bucket = self.deadline_met if t_complete <= req.deadline else self.deadline_missed
-            bucket[req.tier] = bucket.get(req.tier, 0) + 1
+            outcome = "met" if t_complete <= req.deadline else "missed"
+            self._inc("repro_deadline_total", tier=req.tier, outcome=outcome)
             ids = res.result.ids
             self._fill.append(float((ids >= 0).sum()) / max(ids.size, 1))
             self._expansions.append(res.result.n_expansions)
@@ -96,9 +133,56 @@ class Telemetry:
     def record_writes(self, n_upsert_rows: int, n_delete_rows: int,
                       n_compactions: int = 0) -> None:
         """Row counts from one batch's applied writes (virtual ledger)."""
-        self.n_upserts += n_upsert_rows
-        self.n_deletes += n_delete_rows
-        self.n_compactions += n_compactions
+        self._inc("repro_writes_total", n_upsert_rows, op="upsert")
+        self._inc("repro_writes_total", n_delete_rows, op="delete")
+        self._inc("repro_compactions_total", n_compactions)
+
+    # -- legacy field compat (read back from the registry) --------------
+    @property
+    def n_completed(self) -> int:
+        return int(self._value("repro_requests_total"))
+
+    @property
+    def n_batches(self) -> int:
+        return int(self._value("repro_batches_total"))
+
+    @property
+    def plan_counts(self) -> Dict[str, int]:
+        m = self._label_map("repro_plan_total", "plan")
+        return {n: m.get(n, 0) for n in STRATEGY_NAMES.values()}
+
+    @property
+    def backend_counts(self) -> Dict[str, int]:
+        return self._label_map("repro_route_total", "route")
+
+    @property
+    def batch_sizes(self) -> Dict[int, int]:
+        m = self._label_map("repro_batch_size_total", "size")
+        return {int(s): c for s, c in m.items()}
+
+    @property
+    def deadline_met(self) -> Dict[str, int]:
+        return self._label_map("repro_deadline_total", "tier", outcome="met")
+
+    @property
+    def deadline_missed(self) -> Dict[str, int]:
+        return self._label_map("repro_deadline_total", "tier", outcome="missed")
+
+    @property
+    def deadline_flushes(self) -> int:
+        return int(self._value("repro_deadline_flush_total"))
+
+    @property
+    def n_upserts(self) -> int:
+        return int(self._value("repro_writes_total", op="upsert"))
+
+    @property
+    def n_deletes(self) -> int:
+        return int(self._value("repro_writes_total", op="delete"))
+
+    @property
+    def n_compactions(self) -> int:
+        return int(self._value("repro_compactions_total"))
 
     # ------------------------------------------------------------------
     def counters(self) -> Dict:

@@ -31,6 +31,7 @@ from ..core.planner import POST_FILTER
 from ..core.predicates import AnyPredicate
 from ..dist.collectives import merge_topk
 from ..models.model import Model
+from ..obs.trace import NULL_TRACER
 
 __all__ = ["Request", "ServeEngine", "ShardedANNEngine"]
 
@@ -147,7 +148,14 @@ class ShardedANNEngine:
         self.n_shards = n_shards or max(1, len(jax.devices()))
         self._n_lists = n_lists
         self.shards = engine.shard_corpus(self.n_shards, n_lists=n_lists)
+        self.tracer = NULL_TRACER
         self._build_locators()
+
+    def set_tracer(self, tracer) -> None:
+        """Install a :class:`repro.obs.Tracer` on the fan-out AND the
+        central engine (planning/write spans come from the latter)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.engine.set_tracer(tracer)
 
     # ------------------------------------------------------------------
     def _build_locators(self) -> None:
@@ -277,15 +285,18 @@ class ShardedANNEngine:
     # ------------------------------------------------------------------
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         q = np.atleast_2d(q)
+        tr = self.tracer
         est, decision, route, plan_overhead = self.engine.plan_ex(pred, k)
         t0 = time.perf_counter()
-        per_shard = [s.search(q, pred, k, decision, est, route=route)
-                     for s in self.shards]
-        d, i = merge_topk(
-            np.stack([r.dists for r in per_shard]),
-            np.stack([r.ids for r in per_shard]),
-            k,
-        )
+        with tr.span("shard_fanout", n_shards=len(self.shards), n_queries=1):
+            per_shard = [s.search(q, pred, k, decision, est, route=route)
+                         for s in self.shards]
+        with tr.span("merge", n_shards=len(self.shards), k=int(k)):
+            d, i = merge_topk(
+                np.stack([r.dists for r in per_shard]),
+                np.stack([r.ids for r in per_shard]),
+                k,
+            )
         elapsed = time.perf_counter() - t0 + plan_overhead
         res = SearchResult(
             d, i, elapsed, per_shard[0].strategy,
@@ -309,15 +320,22 @@ class ShardedANNEngine:
         b = len(preds)
         ests, decisions, routes, plan_overhead = self.engine.plan_batch_ex(preds, k)
         plan_share = plan_overhead / max(b, 1)
+        tr = self.tracer
         t0 = time.perf_counter()
-        per_shard = [s.search_batch(queries, preds, k, decisions, ests, routes=routes)
-                     for s in self.shards]
-        d, i = merge_topk(
-            np.stack([r[0] for r in per_shard]),
-            np.stack([r[1] for r in per_shard]),
-            k,
-        )
-        rounds = np.max(np.stack([r[2] for r in per_shard]), axis=0)
+        per_shard = []
+        with tr.span("shard_fanout", n_shards=len(self.shards), n_queries=b):
+            for si, s in enumerate(self.shards):
+                with tr.span("shard", shard=si):
+                    per_shard.append(
+                        s.search_batch(queries, preds, k, decisions, ests,
+                                       routes=routes, tracer=tr))
+        with tr.span("merge", n_shards=len(self.shards), k=int(k)):
+            d, i = merge_topk(
+                np.stack([r[0] for r in per_shard]),
+                np.stack([r[1] for r in per_shard]),
+                k,
+            )
+            rounds = np.max(np.stack([r[2] for r in per_shard]), axis=0)
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
         route_names = None
         if self.shards and self.shards[0].backend_set is not None:
@@ -352,7 +370,8 @@ class ShardedANNEngine:
             out["shard_pred_cache"] = agg
         return out
 
-    def runtime(self, config=None, service=None, feedback=None):
+    def runtime(self, config=None, service=None, feedback=None, tracer=None,
+                probe=None):
         """Runtime-backed serving entrypoint: a deadline-aware
         :class:`repro.runtime.OnlineRuntime` micro-batching onto this
         sharded engine's ``batch_query`` fan-out.  Lazy import keeps
@@ -360,4 +379,5 @@ class ShardedANNEngine:
         package cycle."""
         from ..runtime import OnlineRuntime
 
-        return OnlineRuntime(self, config=config, service=service, feedback=feedback)
+        return OnlineRuntime(self, config=config, service=service,
+                             feedback=feedback, tracer=tracer, probe=probe)
