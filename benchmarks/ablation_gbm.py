@@ -23,8 +23,8 @@ def run():
         te = [(p, s) for p, s in zip(preds[50:], sels[50:]) if p.n_labels + p.n_ranges >= 2]
         with_model = SelectivityEstimator(eng.dataset_stats).fit(tr_p, tr_s)
         without = SelectivityEstimator(eng.dataset_stats)  # never fit -> independence
-        err_w = [abs(with_model.estimate(p) - s) for p, s in te]
-        err_wo = [abs(without.estimate(p) - s) for p, s in te]
+        err_w = [abs(with_model.estimate(p).sel - s) for p, s in te]
+        err_wo = [abs(without.estimate(p).sel - s) for p, s in te]
         rows.append({
             "dataset": name,
             "mae_with_gbm": round(float(np.mean(err_w)), 4),

@@ -30,9 +30,9 @@ def run(n_queries=30):
             res = eng.query(qs[i], p, K)
             u_sel = recall_at_k(res.result.ids, truth) / max(res.result.elapsed, 1e-7)
             y_true.append(oracle)
-            est, exact = eng.estimator.estimate_ex(p)
+            se = eng.estimator.estimate(p)
             scores.append(float(eng.planner.predict_proba(
-                eng.feat.vector(p, est, K, exact))[0]))
+                eng.feat.vector(p, se.sel, K, se.is_exact))[0]))
             u_planner.append(u_sel)
             u_oracle.append(max(up, uq))
             u_pre.append(up)

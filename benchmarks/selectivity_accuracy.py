@@ -35,8 +35,8 @@ def run():
                 )
             except Exception:
                 continue
-            errs = [abs(est.estimate(p) - s) for p, s in zip(preds, sels)]
-            errs_m = [abs(model_only.estimate(p) - s) for p, s in zip(preds, sels)]
+            errs = [abs(est.estimate(p).sel - s) for p, s in zip(preds, sels)]
+            errs_m = [abs(model_only.estimate(p).sel - s) for p, s in zip(preds, sels)]
             rows.append({
                 "dataset": name, "kind": kname,
                 "mae": round(float(np.mean(errs)), 4),

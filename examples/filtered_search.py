@@ -100,20 +100,20 @@ for out, p in zip(eng.batch_query(dq, dnf_preds, k=K), dnf_preds):
 # ----------------------------------------------------------------------
 print("\nlive-corpus churn (watch sel_is_exact):")
 rp = Predicate(ranges=(RangePred(0, ((q10, q25),)),))
-s, exact = eng.estimator.estimate_ex(rp)
-print(f"  clean corpus:    sel={s:.4f} sel_is_exact={exact}")
+se = eng.estimator.estimate(rp)
+print(f"  clean corpus:    sel={se.sel:.4f} sel_is_exact={se.is_exact}")
 
 rng = np.random.default_rng(0)
 new_rows = rng.choice(len(ds.vectors), 50)
 eng.upsert(ds.vectors[new_rows], ds.cat[new_rows], ds.num[new_rows])
-s, exact = eng.estimator.estimate_ex(rp)
-print(f"  after upsert:    sel={s:.4f} sel_is_exact={exact} "
+se = eng.estimator.estimate(rp)
+print(f"  after upsert:    sel={se.sel:.4f} sel_is_exact={se.is_exact} "
       "(range buckets stale -> demoted)")
 
 lp = Predicate(labels=(LabelEq(0, 2),))
 eng.delete(np.arange(30))
-s, exact = eng.estimator.estimate_ex(lp)
-print(f"  label pred:      sel={s:.4f} sel_is_exact={exact} "
+se = eng.estimator.estimate(lp)
+print(f"  label pred:      sel={se.sel:.4f} sel_is_exact={se.is_exact} "
       "(bitmaps extend + tombstones compose: still exact)")
 
 live = eng.stats()["live"]
@@ -122,8 +122,8 @@ print(f"  live view: {live['live_count']}/{live['n_total']} rows "
       f"segment {live['segment_frac']:.2%})")
 
 eng.compact()
-s, exact = eng.estimator.estimate_ex(rp)
-print(f"  after compact:   sel={s:.4f} sel_is_exact={exact} "
+se = eng.estimator.estimate(rp)
+print(f"  after compact:   sel={se.sel:.4f} sel_is_exact={se.is_exact} "
       "(rebuilt: exact again)")
 
 # ----------------------------------------------------------------------

@@ -30,13 +30,28 @@ from .executors import (
     SearchResult,
     recall_at_k,
 )
+from .plan import (
+    ClausePlan,
+    ExecutionPlan,
+    NO_ROUTE,
+    STRATEGY_NAMES,
+    clause_predicates,
+    collapse_clause_results,
+    default_route_name,
+    expand_for_execution,
+    format_plan,
+)
 from .planner import CorePlanner, PlannerFeatures, INDEXED_PRE, POST_FILTER, PRE_FILTER
-from .predicates import AnyPredicate
-from .selectivity import SelectivityEstimator
+from .predicates import AnyPredicate, Or
+from .selectivity import SelEstimate, SelectivityEstimator
 from .stats import DatasetStats
 
-__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "CorpusShard",
-           "PlanCache", "QueryLabel"]
+__all__ = ["FilteredANNEngine", "EngineConfig", "PlannedResult", "QueryResult",
+           "CorpusShard", "PlanCache", "QueryLabel", "ExecutionPlan",
+           "ClausePlan"]
+
+# legacy spelling, kept for downstream imports (serve, tests)
+_default_route_name = default_route_name
 
 
 @dataclasses.dataclass
@@ -69,10 +84,25 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class PlannedResult:
+    """One served query: the executed :class:`SearchResult` plus the
+    structured :class:`ExecutionPlan` it ran under.  The historical scalar
+    surface (``est_selectivity`` / ``decision``) reads through to the plan."""
+
     result: SearchResult
-    est_selectivity: float
-    decision: int                      # PRE_FILTER / POST_FILTER / INDEXED_PRE
+    plan: ExecutionPlan
     plan_overhead: float               # seconds spent estimating + deciding
+
+    @property
+    def est_selectivity(self) -> float:
+        return self.plan.est
+
+    @property
+    def decision(self) -> int:
+        return self.plan.decision
+
+
+#: public alias — "the thing a query returns" in docs and the API snapshot
+QueryResult = PlannedResult
 
 
 @dataclasses.dataclass
@@ -80,7 +110,10 @@ class QueryLabel:
     """Outcome of one §3.1 utility race (see :meth:`label_query`).
 
     ``route`` is the argmax (backend, knob-tier) class when a BackendSet was
-    raced, else -1; ``route_utils`` holds the per-class utilities."""
+    raced, else -1; ``route_utils`` holds the per-class utilities.  For DNF
+    predicates ``clauses`` carries one :class:`QueryLabel` per unique
+    conjunctive disjunct (first-occurrence order) — the per-clause
+    decomposition the planner and feedback loop train on."""
 
     label: int                         # PRE_FILTER or POST_FILTER
     true_sel: float
@@ -88,25 +121,7 @@ class QueryLabel:
     u_post: float
     route: int = -1
     route_utils: Optional[np.ndarray] = None
-
-    def __iter__(self):
-        # legacy tuple unpacking: label, true_sel, u_pre, u_post
-        return iter((self.label, self.true_sel, self.u_pre, self.u_post))
-
-
-STRATEGY_NAMES = {PRE_FILTER: "pre", POST_FILTER: "post", INDEXED_PRE: "ipre"}
-
-# route value meaning "no routed backend": execute POST rows on the legacy
-# lazy α-doubling post-filter path (bit-identical to the pre-routing engine)
-NO_ROUTE = -1
-
-
-def _default_route_name(decision: int) -> Tuple[str, str]:
-    """(backend, knob) labels for un-routed rows: both pre-filter plans are
-    exact masked scans, the legacy post path is the adaptive IVF executor."""
-    if decision == POST_FILTER:
-        return "ivf", "adapt"
-    return "flat", "exact"
+    clauses: Optional[Tuple["QueryLabel", ...]] = None
 
 
 def _kernel_snapshot() -> Tuple[dict, dict]:
@@ -139,30 +154,23 @@ def package_results(
     d: np.ndarray,
     ids: np.ndarray,
     rounds: np.ndarray,
-    ests: np.ndarray,
-    decisions: np.ndarray,
+    plans: Sequence[ExecutionPlan],
     share: float,
     plan_share: float,
-    route_names: Optional[Sequence[Optional[Tuple[str, str]]]] = None,
 ) -> List[PlannedResult]:
     """Wrap batched (B, k) arrays into per-row PlannedResults — one
     packaging convention for the flat and sharded batch paths (``share`` is
     the batch wall time split evenly across rows, plan overhead included).
-    ``route_names[j]`` is the routed (backend, knob-tier) pair for row j or
-    None for un-routed rows (default naming by decision)."""
+    The strategy / backend / knob labels on each row come from its
+    :class:`ExecutionPlan` (DNF rows report the synthetic ``dnf`` class)."""
     out = []
-    for j in range(len(ests)):
-        dec = int(decisions[j])
-        if route_names is not None and route_names[j] is not None:
-            bk, knob = route_names[j]
-        else:
-            bk, knob = _default_route_name(dec)
+    for j, plan in enumerate(plans):
         out.append(PlannedResult(
             SearchResult(d[j : j + 1], ids[j : j + 1], share,
-                         STRATEGY_NAMES[dec],
+                         plan.strategy,
                          n_expansions=int(rounds[j]),
-                         backend=bk, knob=knob),
-            float(ests[j]), dec, plan_share,
+                         backend=plan.backend, knob=plan.knob),
+            plan, plan_share,
         ))
     return out
 
@@ -366,7 +374,7 @@ def _live_execute_grouped(
 
 
 class PlanCache:
-    """LRU memo of ``(canonical predicate key, k) -> (est, decision, route)``.
+    """LRU memo of ``(canonical predicate key, k) -> ExecutionPlan``.
 
     Serving traffic repeats predicates constantly; planning the same
     predicate is pure — the decision depends only on predicate + dataset
@@ -383,7 +391,7 @@ class PlanCache:
     def __init__(self, capacity: int = 1024):
         assert capacity >= 1
         self.capacity = capacity
-        self._store: "OrderedDict[Tuple, Tuple[float, int, int]]" = OrderedDict()
+        self._store: "OrderedDict[Tuple, ExecutionPlan]" = OrderedDict()
         self.epoch: Tuple = ()        # engine._plan_epoch() the memo is valid under
         self.hits = 0
         self.misses = 0
@@ -408,7 +416,7 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._store)
 
-    def get(self, key) -> Optional[Tuple[float, int, int]]:
+    def get(self, key) -> Optional[ExecutionPlan]:
         hit = self._store.get(key)
         if hit is None:
             self.misses += 1
@@ -417,7 +425,7 @@ class PlanCache:
         self._store.move_to_end(key)
         return hit
 
-    def put(self, key, value: Tuple[float, int, int]) -> None:
+    def put(self, key, value: ExecutionPlan) -> None:
         self._store[key] = value
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
@@ -707,9 +715,24 @@ class FilteredANNEngine:
         meets ``config.route_recall_target``, max-recall when none do —
         becomes the routing label and its utility competes as the post-side
         champion, so a backend that beats BOTH the exact scan and the lazy
-        post path wins the plan decision too.  Returns a
-        :class:`QueryLabel` (legacy 4-tuple unpacking still works)."""
+        post path wins the plan decision too.
+
+        DNF predicates additionally race every unique conjunctive disjunct
+        on its own (``QueryLabel.clauses``, first-occurrence order — the
+        same enumeration the per-disjunct planner uses), so planner /
+        estimator / routing training sees clause-level rows for DNF
+        traffic while the whole-predicate label stays available."""
         q = np.atleast_2d(q)
+        clauses = None
+        if isinstance(pred, Or):
+            seen, cls = set(), []
+            for t in pred.terms:
+                key = self._plan_key(t)
+                if key in seen:
+                    continue
+                seen.add(key)
+                cls.append(self.label_query(q, t, k))
+            clauses = tuple(cls)
         t_m0 = time.perf_counter()
         mask = pred.eval(self.cat, self.num)
         live = getattr(self, "live", None)
@@ -756,7 +779,8 @@ class FilteredANNEngine:
                 route = int(np.argmax(recalls + 1e-9 * route_utils))
             u_post = max(u_post, float(route_utils[route]))
         label = PRE_FILTER if u_pre >= u_post else POST_FILTER
-        return QueryLabel(label, true_sel, u_pre, u_post, route, route_utils)
+        return QueryLabel(label, true_sel, u_pre, u_post, route, route_utils,
+                          clauses=clauses)
 
     def fit(
         self,
@@ -766,24 +790,43 @@ class FilteredANNEngine:
         verbose: bool = False,
     ) -> "FilteredANNEngine":
         """Paper §3.1: execute both strategies per training query, label by
-        utility U = recall@k / T_search, train estimator GBM + planner MLP."""
+        utility U = recall@k / T_search, train estimator GBM + planner MLP.
+
+        DNF training queries decompose: the planner, routing head, and
+        estimator GBM only ever decide/serve *conjunctions* (the per-disjunct
+        planner plans each clause of an ``Or`` independently), so an ``Or``
+        contributes one training row per unique disjunct — features of the
+        disjunct, label/route from its own §3.1 race — instead of one
+        whole-predicate row the heads could never act on."""
         t0 = time.perf_counter()
-        labels, true_sels, route_labels = [], [], []
+        fit_preds, labels, true_sels, route_labels = [], [], [], []
         for q, pred in zip(train_queries, train_preds):
             lab = self.label_query(q, pred, k)
-            labels.append(lab.label)
-            true_sels.append(lab.true_sel)
-            route_labels.append(lab.route)
             if verbose:
                 print(f"  {pred}: sel={lab.true_sel:.4f} "
                       f"U_pre={lab.u_pre:.1f} U_post={lab.u_post:.1f}")
-        # selectivity estimator GBM trains on the same queries (paper §3.1)
-        self.estimator.fit(list(train_preds), true_sels)
+            if lab.clauses:
+                seen: set = set()
+                uniq = [t for t in pred.terms
+                        if not (self._plan_key(t) in seen
+                                or seen.add(self._plan_key(t)))]
+                for t, cl in zip(uniq, lab.clauses):
+                    fit_preds.append(t)
+                    labels.append(cl.label)
+                    true_sels.append(cl.true_sel)
+                    route_labels.append(cl.route)
+            else:
+                fit_preds.append(pred)
+                labels.append(lab.label)
+                true_sels.append(lab.true_sel)
+                route_labels.append(lab.route)
+        # selectivity estimator GBM trains on the same (clause) rows
+        self.estimator.fit(fit_preds, true_sels)
         # re-extract features with the trained estimator so train/test match
         feats = []
-        for p in train_preds:
-            est, ex = self.estimator.estimate_ex(p)
-            feats.append(self.feat.vector(p, est, k, ex))
+        for p in fit_preds:
+            se = self.estimator.estimate(p)
+            feats.append(self.feat.vector(p, se.sel, k, se.is_exact))
         self.planner.fit(np.stack(feats), np.asarray(labels))
         if self.backend_set is not None:
             # routing head on the same features: argmax-utility class labels
@@ -1008,26 +1051,22 @@ class FilteredANNEngine:
         return self
 
     # ------------------------------------------------------------------
-    def plan(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, float]:
-        """Estimate selectivity + pick a strategy, without executing.
+    def make_plan(self, pred: AnyPredicate, k: int = 10,
+                  ) -> Tuple[ExecutionPlan, float]:
+        """Plan one predicate into a structured :class:`ExecutionPlan`,
+        without executing.
 
-        Returns ``(est_selectivity, decision, plan_overhead_s)``; decisions
-        are 3-way (pre / post / indexed-pre — index-covered predicates get
-        the exact popcount selectivity AND the bitmap-masked executor).
-        The plan depends only on predicate and dataset statistics — not on
-        which corpus rows are local — so a sharded deployment plans ONCE and
-        broadcasts the decision to every shard (serve.ShardedANNEngine).
-        Repeat predicates hit the plan cache and skip both the estimator
-        and the MLP dispatch (same values by purity, just cheaper).
-        """
-        est, decision, _route, overhead = self.plan_ex(pred, k)
-        return est, decision, overhead
-
-    def plan_ex(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, int, float]:
-        """:meth:`plan` plus the routing class: returns
-        ``(est_selectivity, decision, route, plan_overhead_s)`` where
-        ``route`` is the (backend, knob-tier) class index for post-filter
-        rows when the routing head is active, else ``NO_ROUTE``."""
+        Conjunctions get a single-clause plan (bit-identical decisions to
+        the historical scalar path).  ``Or`` predicates plan *per disjunct*:
+        each unique conjunctive clause gets its own decision / routing
+        class, and the plan's ``"union"`` merge spec tells execution to run
+        the clauses as ordinary decision groups and merge with cross-clause
+        de-duplication.  The plan depends only on predicate and dataset
+        statistics — not on which corpus rows are local — so a sharded
+        deployment plans ONCE and broadcasts it to every shard.  Repeat
+        predicates hit the plan cache and skip both the estimator and the
+        MLP dispatch (same plan by purity, just cheaper).  Returns
+        ``(plan, plan_overhead_s)``."""
         t0 = time.perf_counter()
         tr = getattr(self, "tracer", NULL_TRACER)
         with tr.span("plan", k=int(k)):
@@ -1035,16 +1074,36 @@ class FilteredANNEngine:
             key = (self._plan_key(pred), int(k))
             hit = self.plan_cache.get(key)
             if hit is not None:
-                tr.annotate(plan_cache="hit",
-                            decision=STRATEGY_NAMES[int(hit[1])],
-                            route=int(hit[2]))
-                return hit[0], hit[1], hit[2], time.perf_counter() - t0
-            est, decision, route = self._plan_cold(pred, k)
-            self.plan_cache.put(key, (est, decision, route))
-            tr.annotate(plan_cache="miss",
-                        decision=STRATEGY_NAMES[int(decision)],
-                        route=int(route))
-        return est, decision, route, time.perf_counter() - t0
+                tr.annotate(plan_cache="hit", decision=hit.strategy,
+                            route=int(hit.route), n_clauses=hit.n_clauses)
+                return hit, time.perf_counter() - t0
+            plan = self._plan_cold(pred, k)
+            self.plan_cache.put(key, plan)
+            tr.annotate(plan_cache="miss", decision=plan.strategy,
+                        route=int(plan.route), n_clauses=plan.n_clauses)
+        return plan, time.perf_counter() - t0
+
+    def explain(self, pred: AnyPredicate, k: int = 10) -> str:
+        """Pretty-print the :class:`ExecutionPlan` for ``(pred, k)`` without
+        executing — one line per clause with decision, backend class, and
+        the selectivity estimate the choice was made under."""
+        plan, _ = self.make_plan(pred, k)
+        return format_plan(plan, pred)
+
+    def plan(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, float]:
+        """Scalar spelling of :meth:`make_plan`: returns
+        ``(est_selectivity, decision, plan_overhead_s)``.  For DNF plans the
+        decision is the dominant clause's (see ``ExecutionPlan.decision``)."""
+        plan, overhead = self.make_plan(pred, k)
+        return plan.est, plan.decision, overhead
+
+    def plan_ex(self, pred: AnyPredicate, k: int = 10) -> Tuple[float, int, int, float]:
+        """:meth:`plan` plus the routing class: returns
+        ``(est_selectivity, decision, route, plan_overhead_s)`` where
+        ``route`` is the (backend, knob-tier) class index for post-filter
+        rows when the routing head is active, else ``NO_ROUTE``."""
+        plan, overhead = self.make_plan(pred, k)
+        return plan.est, plan.decision, plan.route, overhead
 
     def _class_names(self) -> Optional[Tuple[str, ...]]:
         """This engine's (backend, knob-tier) class enumeration.  Derived
@@ -1087,63 +1146,131 @@ class FilteredANNEngine:
                 self.estimator.generation,
                 getattr(self, "corpus_generation", 0))
 
-    def _plan_cold(self, pred: AnyPredicate, k: int) -> Tuple[float, int, int]:
+    def _route_pair(self, decision: int, route: int) -> Tuple[str, str]:
+        """Resolve a (decision, routing class) pair to its (backend, knob)
+        execution class — routed post rows name their BackendSet class, all
+        other rows the default class implied by the decision."""
+        if decision == POST_FILTER and route >= 0:
+            bs = getattr(self, "backend_set", None)
+            if bs is not None:
+                return bs.classes()[route]
+            names = self._class_names()
+            if names is not None and route < len(names):
+                bk, _, knob = names[route].partition(":")
+                return bk, knob
+        return default_route_name(decision)
+
+    def _decide_clauses(self, preds: Sequence, ests: np.ndarray,
+                        exact: np.ndarray, k: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """One feature matrix + one planner dispatch over conjunction rows:
+        returns per-row ``(decisions, routes)``."""
+        fm = self.feat.matrix(list(preds), ests, k, exact)
+        if self.planner.params:
+            decisions = self.planner.decide(fm).astype(np.int32)
+        else:
+            # untrained fallback mirrors the planner's cost heuristic: the
+            # selectivity threshold picks pre vs post, coverage upgrades
+            # pre to the indexed variant
+            decisions = np.where(ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
+            decisions = np.where(
+                (decisions == PRE_FILTER) & exact, INDEXED_PRE, decisions
+            ).astype(np.int32)
+        routes = np.full(len(preds), NO_ROUTE, np.int32)
+        if self._routing_active():
+            r = self.planner.route(fm)
+            if r is not None:
+                routes = np.where(decisions == POST_FILTER, r, NO_ROUTE).astype(np.int32)
+        return decisions, routes
+
+    def _single_plan(self, pred, est: float, exact: bool, decision: int,
+                     route: int) -> ExecutionPlan:
+        bk, knob = self._route_pair(decision, route)
+        cl = ClausePlan(self._plan_key(pred), int(decision), bk, knob,
+                        float(est), int(route), bool(exact))
+        return ExecutionPlan((cl,), float(est), bool(exact), "none")
+
+    def _plan_dnf(self, pred: Or, k: int, se: SelEstimate) -> ExecutionPlan:
+        """Per-disjunct planning: each unique conjunctive clause of the DNF
+        is decided and routed independently (one batched head dispatch over
+        the clause feature rows), producing a ``"union"``-merge plan."""
+        tr = getattr(self, "tracer", NULL_TRACER)
+        seen: set = set()
+        terms, ests = [], []
+        for t, ce in zip(pred.terms, se.per_clause):
+            key = self._plan_key(t)
+            if key in seen:
+                continue
+            seen.add(key)
+            terms.append(t)
+            ests.append(ce)
+        if not terms:                       # empty Or: matches nothing
+            return ExecutionPlan((), 0.0, True, "union")
+        sels = np.asarray([c.sel for c in ests], np.float64)
+        exact = np.asarray([c.is_exact for c in ests], bool)
+        decisions, routes = self._decide_clauses(terms, sels, exact, k)
+        clauses = []
+        for j, t in enumerate(terms):
+            bk, knob = self._route_pair(int(decisions[j]), int(routes[j]))
+            clauses.append(ClausePlan(
+                self._plan_key(t), int(decisions[j]), bk, knob,
+                float(sels[j]), int(routes[j]), bool(exact[j])))
+            if tr.enabled:
+                with tr.span("clause", index=j,
+                             decision=STRATEGY_NAMES[int(decisions[j])],
+                             backend=bk, knob=knob, route=int(routes[j])):
+                    tr.annotate(est=round(float(sels[j]), 6),
+                                exact=bool(exact[j]))
+        return ExecutionPlan(tuple(clauses), float(se.sel),
+                             bool(se.is_exact), "union")
+
+    def _plan_cold(self, pred: AnyPredicate, k: int) -> ExecutionPlan:
         tr = getattr(self, "tracer", NULL_TRACER)
         with tr.span("predicate_compile"):
             pc = getattr(self, "pred_cache", None)
             m0 = pc.misses if pc is not None else 0
-            est, exact = self.estimator.estimate_ex(pred)
+            se = self.estimator.estimate(pred)
             if tr.enabled:
-                tr.annotate(estimator="exact" if exact else "gbm")
+                tr.annotate(estimator="exact" if se.is_exact else "gbm")
                 if pc is not None:
                     miss = pc.misses - m0
                     n_words = (self.vectors.shape[0] + 31) // 32
                     tr.annotate(pred_cache="miss" if miss else "hit",
                                 bitmap_words=miss * n_words)
-        fv = self.feat.vector(pred, est, k, exact)
+        if isinstance(pred, Or):
+            return self._plan_dnf(pred, k, se)
+        fv = self.feat.vector(pred, se.sel, k, se.is_exact)
         if self.planner.params:
             decision = int(self.planner.decide(fv)[0])
         else:
-            # untrained fallback mirrors the planner's cost heuristic: the
-            # selectivity threshold picks pre vs post, coverage upgrades
-            # pre to the indexed variant
-            decision = PRE_FILTER if est < 0.05 else POST_FILTER
-            if decision == PRE_FILTER and exact:
+            decision = PRE_FILTER if se.sel < 0.05 else POST_FILTER
+            if decision == PRE_FILTER and se.is_exact:
                 decision = INDEXED_PRE
         route = NO_ROUTE
         if decision == POST_FILTER and self._routing_active():
             r = self.planner.route(fv)
             if r is not None:
                 route = int(r[0])
-        return est, decision, route
+        return self._single_plan(pred, se.sel, se.is_exact, decision, route)
 
-    def plan_batch(
+    def make_plan_batch(
         self, preds: Sequence[AnyPredicate], k: int = 10
-    ) -> Tuple[np.ndarray, np.ndarray, float]:
-        """Batched :meth:`plan`: one selectivity pass, one (B, F) feature
-        matrix, ONE planner jit dispatch instead of B.
+    ) -> Tuple[List[ExecutionPlan], float]:
+        """Batched :meth:`make_plan`: one selectivity pass, one (rows, F)
+        feature matrix over every conjunction AND every DNF clause in the
+        batch, ONE planner jit dispatch instead of B.
 
-        Returns ``(est_selectivities (B,), decisions (B,), plan_overhead_s)``
-        where the overhead covers the whole batch.  Rows whose (predicate,
-        k) was planned before resolve from the plan cache; only the misses
-        pay the estimator pass and the MLP dispatch.
+        Returns ``(plans (B,), plan_overhead_s)`` where the overhead covers
+        the whole batch.  Rows whose (predicate, k) was planned before
+        resolve from the plan cache; only the misses pay the estimator pass
+        and the MLP dispatch.
         """
-        ests, decisions, _routes, overhead = self.plan_batch_ex(preds, k)
-        return ests, decisions, overhead
-
-    def plan_batch_ex(
-        self, preds: Sequence[AnyPredicate], k: int = 10
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, float]:
-        """Batched :meth:`plan_ex`: additionally returns per-row routing
-        classes (``NO_ROUTE`` for non-post rows or when routing is off)."""
         t0 = time.perf_counter()
         tr = getattr(self, "tracer", NULL_TRACER)
         b = len(preds)
         with tr.span("plan", n_preds=b, k=int(k)):
             self.plan_cache.validate_epoch(self._plan_epoch())
-            ests = np.zeros(b, np.float64)
-            decisions = np.zeros(b, np.int32)
-            routes = np.full(b, NO_ROUTE, np.int32)
+            plans: List[Optional[ExecutionPlan]] = [None] * b
             keys = [(self._plan_key(p), int(k)) for p in preds]
             miss = []
             for i, key in enumerate(keys):
@@ -1151,46 +1278,97 @@ class FilteredANNEngine:
                 if hit is None:
                     miss.append(i)
                 else:
-                    ests[i], decisions[i], routes[i] = hit
+                    plans[i] = hit
             if miss:
                 sub = [preds[i] for i in miss]
                 with tr.span("predicate_compile", n_preds=len(miss)):
                     pc = getattr(self, "pred_cache", None)
                     m0 = pc.misses if pc is not None else 0
-                    m_ests, m_exact = self.estimator.estimate_batch_ex(sub)
+                    ses = self.estimator.estimate_batch(sub)
                     if tr.enabled:
-                        tr.annotate(
-                            estimator_exact=int(np.asarray(m_exact).sum()),
-                            estimator_gbm=len(miss) - int(np.asarray(m_exact).sum()),
-                        )
+                        n_ex = sum(s.is_exact for s in ses)
+                        tr.annotate(estimator_exact=int(n_ex),
+                                    estimator_gbm=len(miss) - int(n_ex))
                         if pc is not None:
                             md = pc.misses - m0
                             n_words = (self.vectors.shape[0] + 31) // 32
                             tr.annotate(pred_cache_misses=md,
                                         bitmap_words=md * n_words)
-                fm = self.feat.matrix(sub, m_ests, k, m_exact)
-                if self.planner.params:
-                    m_dec = self.planner.decide(fm).astype(np.int32)
+                # pool every decidable row — conjunctions as themselves, DNF
+                # rows as their unique clauses — into ONE head dispatch
+                spec_pred, spec_est, spec_exact = [], [], []
+                spec_owner: List[Tuple[int, bool]] = []   # (miss slot, is_clause)
+                for j, (p, se) in enumerate(zip(sub, ses)):
+                    if isinstance(p, Or):
+                        seen: set = set()
+                        for t, ce in zip(p.terms, se.per_clause):
+                            tk = self._plan_key(t)
+                            if tk in seen:
+                                continue
+                            seen.add(tk)
+                            spec_pred.append(t)
+                            spec_est.append(ce.sel)
+                            spec_exact.append(ce.is_exact)
+                            spec_owner.append((j, True))
+                    else:
+                        spec_pred.append(p)
+                        spec_est.append(se.sel)
+                        spec_exact.append(se.is_exact)
+                        spec_owner.append((j, False))
+                if spec_pred:
+                    decisions, routes = self._decide_clauses(
+                        spec_pred, np.asarray(spec_est, np.float64),
+                        np.asarray(spec_exact, bool), k)
                 else:
-                    m_dec = np.where(m_ests < 0.05, PRE_FILTER, POST_FILTER).astype(np.int32)
-                    m_dec = np.where(
-                        (m_dec == PRE_FILTER) & m_exact, INDEXED_PRE, m_dec
-                    ).astype(np.int32)
-                m_routes = np.full(len(miss), NO_ROUTE, np.int32)
-                if self._routing_active():
-                    r = self.planner.route(fm)
-                    if r is not None:
-                        m_routes = np.where(m_dec == POST_FILTER, r, NO_ROUTE).astype(np.int32)
-                for j, i in enumerate(miss):
-                    ests[i], decisions[i], routes[i] = (
-                        float(m_ests[j]), int(m_dec[j]), int(m_routes[j])
-                    )
-                    self.plan_cache.put(
-                        keys[i], (float(m_ests[j]), int(m_dec[j]), int(m_routes[j]))
-                    )
+                    decisions = routes = np.zeros(0, np.int32)
+                by_owner: Dict[int, List[int]] = {}
+                for r, (j, _) in enumerate(spec_owner):
+                    by_owner.setdefault(j, []).append(r)
+                n_dnf = 0
+                for j, (p, se) in enumerate(zip(sub, ses)):
+                    rows = by_owner.get(j, [])
+                    if isinstance(p, Or):
+                        n_dnf += 1
+                        clauses = tuple(
+                            ClausePlan(
+                                self._plan_key(spec_pred[r]),
+                                int(decisions[r]),
+                                *self._route_pair(int(decisions[r]), int(routes[r])),
+                                float(spec_est[r]), int(routes[r]),
+                                bool(spec_exact[r]))
+                            for r in rows)
+                        plans[miss[j]] = ExecutionPlan(
+                            clauses, float(se.sel), bool(se.is_exact), "union")
+                    else:
+                        r = rows[0]
+                        plans[miss[j]] = self._single_plan(
+                            p, se.sel, se.is_exact,
+                            int(decisions[r]), int(routes[r]))
+                    self.plan_cache.put(keys[miss[j]], plans[miss[j]])
+                if tr.enabled and n_dnf:
+                    tr.annotate(n_dnf=n_dnf)
             tr.annotate(plan_cache_hits=b - len(miss),
                         plan_cache_misses=len(miss))
-        return ests, decisions, routes, time.perf_counter() - t0
+        return plans, time.perf_counter() - t0
+
+    def plan_batch(
+        self, preds: Sequence[AnyPredicate], k: int = 10
+    ) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Scalar spelling of :meth:`make_plan_batch`: returns
+        ``(est_selectivities (B,), decisions (B,), plan_overhead_s)``."""
+        plans, overhead = self.make_plan_batch(preds, k)
+        return (np.asarray([p.est for p in plans], np.float64),
+                np.asarray([p.decision for p in plans], np.int32), overhead)
+
+    def plan_batch_ex(
+        self, preds: Sequence[AnyPredicate], k: int = 10
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, float]:
+        """Batched :meth:`plan_ex`: additionally returns per-row routing
+        classes (``NO_ROUTE`` for non-post rows or when routing is off)."""
+        plans, overhead = self.make_plan_batch(preds, k)
+        return (np.asarray([p.est for p in plans], np.float64),
+                np.asarray([p.decision for p in plans], np.int32),
+                np.asarray([p.route for p in plans], np.int32), overhead)
 
     def shard_corpus(self, n_shards: int, n_lists: Optional[int] = None) -> List[CorpusShard]:
         """Partition the corpus into ``n_shards`` contiguous shards, each with
@@ -1249,10 +1427,14 @@ class FilteredANNEngine:
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         """Plan + execute one filtered ANN query."""
         q = np.atleast_2d(q)
-        est, decision, route, plan_overhead = self.plan_ex(pred, k)
+        plan, plan_overhead = self.make_plan(pred, k)
         tr = getattr(self, "tracer", NULL_TRACER)
         live = getattr(self, "live", None)
-        if live is not None and live.dirty:
+        dirty = live is not None and live.dirty
+        if plan.is_dnf:
+            return self._query_dnf(q, pred, k, plan, plan_overhead)
+        est, decision, route = plan.est, plan.decision, plan.route
+        if dirty:
             # mutated corpus: the tombstone/segment-composing executor
             t0 = time.perf_counter()
             decisions = np.array([decision], np.int32)
@@ -1267,10 +1449,8 @@ class FilteredANNEngine:
                 if tr.enabled:
                     _annotate_kernel_delta(tr, kc0, kw0)
             share = time.perf_counter() - t0 + plan_overhead
-            return package_results(
-                d, ids, rounds, np.array([est]), decisions, share,
-                plan_overhead, route_names=self._route_names(decisions, routes),
-            )[0]
+            return package_results(d, ids, rounds, [plan], share,
+                                   plan_overhead)[0]
         with tr.span("execute", n_queries=1, k=int(k), live=False,
                      decision=STRATEGY_NAMES[decision]):
             kc0, kw0 = _kernel_snapshot() if tr.enabled else ({}, {})
@@ -1291,25 +1471,42 @@ class FilteredANNEngine:
             if tr.enabled:
                 _annotate_kernel_delta(tr, kc0, kw0)
         if not res.backend:
-            if decision == POST_FILTER and route >= 0 and self.backend_set is not None:
-                res.backend, res.knob = self.backend_set.classes()[route]
-            else:
-                res.backend, res.knob = _default_route_name(decision)
+            res.backend, res.knob = plan.backend, plan.knob
         res.elapsed += plan_overhead   # end-to-end includes planning (paper §4.1)
-        return PlannedResult(res, est, decision, plan_overhead)
+        return PlannedResult(res, plan, plan_overhead)
 
-    def _route_names(
-        self, decisions: np.ndarray, routes: np.ndarray
-    ) -> Optional[List[Optional[Tuple[str, str]]]]:
-        """Per-row (backend, knob) labels for routed rows, None elsewhere."""
-        if getattr(self, "backend_set", None) is None:
-            return None
-        classes = self.backend_set.classes()
-        return [
-            classes[int(routes[j])]
-            if decisions[j] == POST_FILTER and routes[j] >= 0 else None
-            for j in range(len(routes))
-        ]
+    def _query_dnf(self, q: np.ndarray, pred: AnyPredicate, k: int,
+                   plan: ExecutionPlan, plan_overhead: float) -> PlannedResult:
+        """Per-disjunct execution of one DNF query: the clauses run as
+        ordinary decision-group rows through the shared batch executor, then
+        merge with cross-clause de-duplication."""
+        tr = getattr(self, "tracer", NULL_TRACER)
+        live = getattr(self, "live", None)
+        dirty = live is not None and live.dirty
+        exp_rows, exp_preds, decisions, ests, routes, row_map = (
+            expand_for_execution([pred], [plan]))
+        t0 = time.perf_counter()
+        with tr.span("execute", n_queries=1, k=int(k), live=dirty,
+                     decision="dnf", n_clauses=plan.n_clauses):
+            kc0, kw0 = _kernel_snapshot() if tr.enabled else ({}, {})
+            qq = q[exp_rows]
+            if dirty:
+                d, ids, rounds = _live_execute_grouped(
+                    self.pre_exec, self.ipre_exec, self.post_exec,
+                    qq, exp_preds, k, decisions, ests, live,
+                    routes=routes, backend_set=self.backend_set, tracer=tr,
+                )
+            else:
+                d, ids, rounds = _execute_grouped(
+                    self.pre_exec, self.ipre_exec, self.post_exec,
+                    qq, exp_preds, k, decisions, ests,
+                    routes=routes, backend_set=self.backend_set, tracer=tr,
+                )
+            d, ids, rounds = collapse_clause_results(d, ids, rounds, row_map, k)
+            if tr.enabled:
+                _annotate_kernel_delta(tr, kc0, kw0)
+        share = time.perf_counter() - t0 + plan_overhead
+        return package_results(d, ids, rounds, [plan], share, plan_overhead)[0]
 
     def batch_query(
         self, queries: np.ndarray, preds: Sequence[AnyPredicate], k: int = 10
@@ -1329,8 +1526,14 @@ class FilteredANNEngine:
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         b = len(preds)
-        ests, decisions, routes, plan_overhead = self.plan_batch_ex(preds, k)
+        plans, plan_overhead = self.make_plan_batch(preds, k)
         plan_share = plan_overhead / max(b, 1)
+        exp_rows, exp_preds, decisions, ests, routes, row_map = (
+            expand_for_execution(preds, plans))
+        # no DNF rows: the expansion is the identity and execution below is
+        # bit-identical to the historical whole-predicate batch path
+        identity = len(exp_preds) == b and all(len(m) == 1 for m in row_map)
+        xq = queries if identity else queries[exp_rows]
         t0 = time.perf_counter()
         live = getattr(self, "live", None)
         tr = getattr(self, "tracer", NULL_TRACER)
@@ -1340,20 +1543,22 @@ class FilteredANNEngine:
             if live is not None and live.dirty:
                 d, ids, rounds = _live_execute_grouped(
                     self.pre_exec, self.ipre_exec, self.post_exec,
-                    queries, preds, k, decisions, ests, live,
+                    xq, exp_preds, k, decisions, ests, live,
                     routes=routes, backend_set=self.backend_set, tracer=tr,
                 )
             else:
                 d, ids, rounds = _execute_grouped(
                     self.pre_exec, self.ipre_exec, self.post_exec,
-                    queries, preds, k, decisions, ests,
+                    xq, exp_preds, k, decisions, ests,
                     routes=routes, backend_set=self.backend_set, tracer=tr,
                 )
+            if not identity:
+                d, ids, rounds = collapse_clause_results(
+                    d, ids, rounds, row_map, k)
             if tr.enabled:
                 _annotate_kernel_delta(tr, kc0, kw0)
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
-        return package_results(d, ids, rounds, ests, decisions, share, plan_share,
-                               route_names=self._route_names(decisions, routes))
+        return package_results(d, ids, rounds, plans, share, plan_share)
 
     # ------------------------------------------------------------------
     def ground_truth(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> np.ndarray:

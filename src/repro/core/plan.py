@@ -1,0 +1,243 @@
+"""Structured query plans: per-disjunct DNF planning behind ``ExecutionPlan``.
+
+The planner used to speak in raw ints — a single ``decision`` plus a
+positional ``(backend, knob)`` pair threaded through every layer.  That
+representation cannot express the per-disjunct plans the paper's §3 planner
+wants for DNF predicates: ``Or((a, b))`` may be cheapest with clause ``a``
+pre-filtered (tiny exact mask) while clause ``b`` post-filters through a
+routed IVF backend.  This module is the structured replacement:
+
+* :class:`ClausePlan` — the plan for ONE conjunctive disjunct: its canonical
+  clause key, the §3.2 strategy decision, the resolved ``(backend, knob)``
+  execution class, the selectivity estimate it was planned under, and the
+  routing-head class index (``NO_ROUTE`` when routing is off / non-post).
+* :class:`ExecutionPlan` — an ordered tuple of clause plans plus a merge
+  spec.  ``merge == "none"`` is the classic whole-predicate plan (one
+  clause, bit-identical to the legacy path); ``merge == "union"`` means the
+  clauses execute independently as ordinary decision groups and their
+  top-k lists are merged with cross-clause de-duplication
+  (:func:`repro.dist.collectives.merge_topk_unique`).
+
+Clause plans are keyed by :func:`repro.filter.cache.canonical_key` of their
+disjunct, NOT by term position: ``Or`` predicates that differ only in term
+order share a plan-cache entry, so execution must align concrete terms to
+clause plans via the key.
+
+The legacy read-back surface (``decision`` / ``backend`` / ``knob`` /
+``route``) survives as properties so downstream consumers (telemetry,
+scheduler service model, fleet fair-share) keep working: a multi-clause
+plan reports its *dominant* clause decision (the clause with the largest
+estimated selectivity — the one that bounds service time) and the synthetic
+``("dnf", "")`` backend class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .planner import INDEXED_PRE, POST_FILTER, PRE_FILTER
+
+STRATEGY_NAMES = {PRE_FILTER: "pre", POST_FILTER: "post", INDEXED_PRE: "ipre"}
+
+#: routing-head sentinel: the row was not (or could not be) routed to a
+#: concrete backend class.
+NO_ROUTE = -1
+
+
+def default_route_name(decision: int) -> Tuple[str, str]:
+    """Backend/knob pair implied by a decision when routing is off."""
+    if decision == POST_FILTER:
+        return "ivf", "adapt"
+    return "flat", "exact"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClausePlan:
+    """Plan for one conjunctive disjunct of a (possibly DNF) predicate."""
+
+    clause_key: Tuple          # canonical_key of the disjunct
+    decision: int              # PRE_FILTER / POST_FILTER / INDEXED_PRE
+    backend: str               # resolved execution class, e.g. "ivf"
+    knob: str                  # e.g. "adapt", "exact", an IVF nprobe tier
+    est: float                 # estimated selectivity the plan was made under
+    route: int = NO_ROUTE      # routing-head class index, NO_ROUTE if unrouted
+    sel_exact: bool = False    # estimate came from a covering bitmap popcount
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A small tree: clause plans + how to combine their results.
+
+    ``merge``:
+      * ``"none"``  — single whole-predicate clause; execute directly.
+      * ``"union"`` — per-disjunct DNF: execute each clause as its own
+        decision-group row, then merge the per-clause top-k lists with
+        cross-clause de-duplication (a row matching two disjuncts appears
+        once, at its best distance).
+    """
+
+    clauses: Tuple[ClausePlan, ...]
+    est: float                 # whole-predicate selectivity estimate
+    sel_exact: bool            # whole-predicate estimate is exact
+    merge: str = "none"        # "none" | "union"
+
+    @property
+    def n_clauses(self) -> int:
+        return len(self.clauses)
+
+    @property
+    def is_dnf(self) -> bool:
+        return self.merge == "union"
+
+    def _dominant(self) -> ClausePlan:
+        return max(self.clauses, key=lambda c: c.est)
+
+    # legacy read-back surface ------------------------------------------------
+    @property
+    def decision(self) -> int:
+        """Single-clause: that clause's decision.  DNF: the dominant
+        (largest-est) clause's decision — the one that bounds service time."""
+        if not self.clauses:
+            return PRE_FILTER
+        if len(self.clauses) == 1:
+            return self.clauses[0].decision
+        return self._dominant().decision
+
+    @property
+    def backend(self) -> str:
+        if self.is_dnf:
+            return "dnf"
+        return self.clauses[0].backend if self.clauses else ""
+
+    @property
+    def knob(self) -> str:
+        if self.is_dnf:
+            return ""
+        return self.clauses[0].knob if self.clauses else ""
+
+    @property
+    def route(self) -> int:
+        if self.is_dnf or not self.clauses:
+            return NO_ROUTE
+        return self.clauses[0].route
+
+    @property
+    def strategy(self) -> str:
+        """Name used in result rows / telemetry: "pre"/"post"/"ipre"/"dnf"."""
+        return "dnf" if self.is_dnf else STRATEGY_NAMES[self.decision]
+
+
+def clause_predicates(pred, plan: ExecutionPlan) -> List:
+    """Concrete sub-predicates aligned with ``plan.clauses``.
+
+    For ``merge == "none"`` this is just ``[pred]``.  For a DNF plan the
+    clauses were planned over the *unique* disjuncts in first-occurrence
+    order; terms are matched back by canonical key because ``Or`` terms that
+    hash to the same plan-cache entry may be ordered differently."""
+    from ..filter.cache import canonical_key
+
+    if plan.merge == "none":
+        return [pred]
+    by_key = {}
+    for t in getattr(pred, "terms", ()):
+        by_key.setdefault(canonical_key(t), t)
+    return [by_key[c.clause_key] for c in plan.clauses]
+
+
+def expand_for_execution(preds: Sequence, plans: Sequence[ExecutionPlan]):
+    """Flatten per-row plans into per-clause execution rows.
+
+    Returns ``(exp_rows, exp_preds, decisions, ests, routes, row_map)`` where
+    ``exp_rows[j]`` is the original batch row clause ``j`` belongs to (index
+    the query matrix with it) and ``row_map[i]`` lists the expanded rows that
+    must be collapsed back into original row ``i``.  Single-clause rows
+    expand to themselves, so a batch with no DNF plans round-trips as the
+    identity (same preds, same decisions — the legacy fast path)."""
+    exp_rows: List[int] = []
+    exp_preds: List = []
+    decisions: List[int] = []
+    ests: List[float] = []
+    routes: List[int] = []
+    row_map: List[List[int]] = []
+    for i, (pred, plan) in enumerate(zip(preds, plans)):
+        cps = clause_predicates(pred, plan)
+        rows = []
+        for cp, cl in zip(cps, plan.clauses):
+            rows.append(len(exp_preds))
+            exp_rows.append(i)
+            exp_preds.append(cp)
+            decisions.append(cl.decision)
+            ests.append(cl.est)
+            routes.append(cl.route)
+        row_map.append(rows)
+    return (np.asarray(exp_rows, np.int64), exp_preds,
+            np.asarray(decisions, np.int32), np.asarray(ests, np.float64),
+            np.asarray(routes, np.int32), row_map)
+
+
+def collapse_clause_results(d: np.ndarray, ids: np.ndarray,
+                            rounds: np.ndarray, row_map: List[List[int]],
+                            k: int):
+    """Collapse expanded per-clause rows back to one row per original query.
+
+    Multi-clause rows merge their clause top-k lists with cross-clause
+    de-duplication; single-clause rows pass through untouched.  Rows whose
+    clause lists share ids keep each id once at its best (lowest-key)
+    occurrence, so the exact tier reproduces the whole-predicate union-mask
+    scan bit-for-bit."""
+    from ..dist.collectives import merge_topk_unique
+
+    if all(len(rows) == 1 for rows in row_map):
+        return d, ids, rounds
+    b = len(row_map)
+    out_d = np.full((b, k), np.inf, np.float32)
+    out_i = np.full((b, k), -1, np.int32)
+    out_r = np.zeros(b, dtype=rounds.dtype if rounds is not None else np.int32)
+    # group multi-clause rows by clause count so each group merges in one
+    # vectorised merge_topk_unique call
+    groups: dict = {}
+    for i, rows in enumerate(row_map):
+        if len(rows) == 1:
+            out_d[i], out_i[i] = d[rows[0]], ids[rows[0]]
+            out_r[i] = rounds[rows[0]]
+        elif rows:
+            groups.setdefault(len(rows), []).append(i)
+        # len(rows) == 0: empty Or — stays at the all-padding row
+    for c, members in groups.items():
+        dd = np.stack([d[row_map[i]] for i in members], axis=1)    # (c, m, k)
+        ii = np.stack([ids[row_map[i]] for i in members], axis=1)
+        md, mi = merge_topk_unique(dd, ii, k)
+        out_d[members], out_i[members] = md, mi
+        out_r[members] = [int(rounds[row_map[i]].max()) for i in members]
+    return out_d, out_i, out_r
+
+
+def format_plan(plan: ExecutionPlan, pred=None) -> str:
+    """Render a plan as a small tree — ``engine.explain`` / ``--explain``."""
+    head = (f"ExecutionPlan merge={plan.merge} clauses={plan.n_clauses} "
+            f"est={plan.est:.4f}{' (exact)' if plan.sel_exact else ''}")
+    cps: Optional[List] = None
+    if pred is not None:
+        try:
+            cps = clause_predicates(pred, plan)
+        except (KeyError, ImportError):
+            cps = None
+    lines = [head]
+    for j, cl in enumerate(plan.clauses):
+        branch = "└─" if j == len(plan.clauses) - 1 else "├─"
+        what = f" {cps[j]}" if cps is not None else ""
+        route = f" route={cl.route}" if cl.route != NO_ROUTE else ""
+        lines.append(
+            f"{branch} clause[{j}]{what} -> {STRATEGY_NAMES[cl.decision]} "
+            f"backend={cl.backend}:{cl.knob} est={cl.est:.4f}"
+            f"{' (exact)' if cl.sel_exact else ''}{route}")
+    return "\n".join(lines)
+
+
+__all__ = [
+    "PRE_FILTER", "POST_FILTER", "INDEXED_PRE", "STRATEGY_NAMES", "NO_ROUTE",
+    "ClausePlan", "ExecutionPlan", "clause_predicates", "collapse_clause_results",
+    "default_route_name", "expand_for_execution", "format_plan",
+]

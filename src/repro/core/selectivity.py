@@ -12,10 +12,19 @@ Routing:
 * two-label conjunction          -> exact 2-D co-occurrence lookup
 * >=3 labels, or mixed label+range -> GBM over lightweight features, with
   range features short-circuited to zero for label-only predicates.
-* DNF (``Or``) without an index  -> independence union of per-term
-  estimates, ``1 - prod(1 - s_t)``.
+* DNF (``Or``)                   -> per-clause estimates for every
+  conjunctive disjunct (each routed through the rules above), plus a
+  whole-predicate value: the exact popcount when the index covers the
+  DNF, else the independence union ``1 - prod(1 - s_t)``.
 * negated leaves without an index -> positive-part estimate scaled by
   ``prod(1 - s_leaf)`` under independence.
+
+The public surface is one pair of methods — :meth:`estimate` and
+:meth:`estimate_batch` — returning :class:`SelEstimate` records carrying
+the estimate, the exactness flag, and (for ``Or``) the per-clause
+breakdown the per-disjunct planner consumes.  The historical
+``estimate_ex`` / ``estimate_batch_ex`` tuple spellings survive as thin
+deprecated aliases for one release.
 
 Feature vector fed to the GBM (paper §3.2.1 + §3.2.3):
   0: independence-assumption selectivity           (product of marginals)
@@ -30,8 +39,9 @@ Feature vector fed to the GBM (paper §3.2.1 + §3.2.3):
 """
 from __future__ import annotations
 
+import dataclasses
 from itertools import combinations
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,9 +49,29 @@ from .gbm import GradientBoostingRegressor
 from .predicates import LabelEq, Or, Predicate, label_ids
 from .stats import DatasetStats
 
-__all__ = ["SelectivityEstimator", "N_FEATURES"]
+__all__ = ["SelEstimate", "SelectivityEstimator", "N_FEATURES"]
 
 N_FEATURES = 9
+
+
+@dataclasses.dataclass(frozen=True)
+class SelEstimate:
+    """One selectivity estimate.
+
+    ``sel``        — estimated (or exact) fraction of corpus rows matching.
+    ``is_exact``   — True only on the index-covered popcount path, where the
+                     value is ground truth rather than an estimate.
+    ``per_clause`` — for ``Or`` predicates, one :class:`SelEstimate` per term
+                     (aligned with ``pred.terms``, duplicates included); None
+                     for conjunctions.
+    """
+
+    sel: float
+    is_exact: bool = False
+    per_clause: Optional[Tuple["SelEstimate", ...]] = None
+
+    def __float__(self) -> float:
+        return self.sel
 
 
 class SelectivityEstimator:
@@ -109,9 +139,10 @@ class SelectivityEstimator:
         pairs — in the paper these ground truths come from the same training
         queries used for the planner, measured on the sampled subset.
 
-        The GBM only ever *serves* conjunctive predicates (DNF ``Or``
-        shapes route through the exact index or the independence union,
-        never the model), so ``Or`` entries in the training pool are
+        The GBM only ever *serves* conjunctive predicates — ``Or`` shapes
+        decompose per clause in :meth:`estimate`, and the engine's ``fit``
+        decomposes DNF training traffic into (disjunct, clause-truth) pairs
+        before calling here — so any ``Or`` entry still in the pool is
         skipped rather than crashing feature extraction."""
         pairs = [
             (p, s) for p, s in zip(preds, true_sel) if isinstance(p, Predicate)
@@ -165,28 +196,22 @@ class SelectivityEstimator:
         return st.range_sel(term)
 
     def _route(self, pred):
-        """Shared routing for estimate/estimate_batch: returns an
-        ``("exact", s)`` index-backed truth, a direct ``("value", s)``
-        estimate, or ``("gbm", features)`` when the predicate needs the
-        model (so a batch can pool its GBM rows into one predict)."""
+        """Shared routing for conjunctions: returns an ``("exact", s)``
+        index-backed truth, a direct ``("value", s)`` estimate, or
+        ``("gbm", features)`` when the predicate needs the model (so a
+        batch can pool its GBM rows into one predict).  ``Or`` predicates
+        never reach here — :meth:`estimate` decomposes them per clause."""
         st = self.stats
 
-        # exact fast path: an index that covers every leaf answers ANY DNF
-        # shape with a popcount — bypassing histograms and the GBM entirely
+        # exact fast path: an index that covers every leaf answers with a
+        # popcount — bypassing histograms and the GBM entirely
         if self.index is not None and self.index.covers(pred):
             return "exact", self._exact_sel(pred)
-
-        if isinstance(pred, Or):
-            # no index: independence union of the term estimates
-            s = 1.0
-            for t in pred.terms:
-                s *= 1.0 - self.estimate(t)
-            return "value", float(np.clip(1.0 - s, 0.0, 1.0))
 
         if pred.nots:
             # negated leaves scale the positive part under independence
             pos = Predicate(labels=pred.labels, ranges=pred.ranges)
-            s = self.estimate(pos)
+            s = self.estimate(pos).sel
             for nt in pred.nots:
                 s *= 1.0 - self._leaf_sel(nt.term)
             return "value", float(np.clip(s, 0.0, 1.0))
@@ -212,47 +237,69 @@ class SelectivityEstimator:
             return "value", float(np.clip(st.independence_sel(pred), 0.0, 1.0))
         return "gbm", self.features(pred)
 
-    def estimate_ex(self, pred) -> Tuple[float, bool]:
-        """``(estimated selectivity, sel_is_exact)`` — the flag is True only
-        on the index-covered popcount path, where the value is ground truth
-        rather than an estimate."""
+    def _sigmoid(self, z) -> np.ndarray:
+        return np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0)
+
+    def estimate(self, pred) -> SelEstimate:
+        """Estimate one predicate.
+
+        ``Or`` predicates decompose: every conjunctive disjunct is estimated
+        independently (``per_clause``, aligned with ``pred.terms``) and the
+        whole-predicate value is the exact union popcount when the index
+        covers the DNF, else the independence union ``1 - prod(1 - s_t)``.
+        """
+        if isinstance(pred, Or):
+            per = tuple(self.estimate(t) for t in pred.terms)
+            if self.index is not None and self.index.covers(pred):
+                return SelEstimate(self._exact_sel(pred), True, per)
+            s = 1.0
+            for c in per:
+                s *= 1.0 - c.sel
+            return SelEstimate(float(np.clip(1.0 - s, 0.0, 1.0)), False, per)
         kind, payload = self._route(pred)
         if kind == "exact":
-            return payload, True
+            return SelEstimate(float(payload), True)
         if kind == "value":
-            return payload, False
+            return SelEstimate(float(payload), False)
         z = float(self.model.predict(payload[None, :])[0])
-        return float(np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0)), False
+        return SelEstimate(float(self._sigmoid(z)), False)
 
-    def estimate(self, pred) -> float:
-        return self.estimate_ex(pred)[0]
+    def estimate_batch(self, preds: Sequence) -> List[SelEstimate]:
+        """Vectorised :meth:`estimate` over a batch of predicates.
 
-    def estimate_batch_ex(self, preds: Sequence) -> Tuple[np.ndarray, np.ndarray]:
-        """Vectorised ``estimate_ex`` over a batch of predicates.
-
-        Exact/histogram routes resolve directly; all GBM-routed predicates
-        share ONE ``model.predict`` over a stacked (B_gbm, F) feature matrix.
+        Conjunction GBM routes share ONE ``model.predict`` over a stacked
+        (B_gbm, F) feature matrix; ``Or`` rows decompose recursively.
         Per-row tree traversal is row-independent, so results are identical
-        to B independent :meth:`estimate` calls.  Returns
-        ``(estimates (B,), sel_is_exact flags (B,) bool)``.
+        to B independent :meth:`estimate` calls.
         """
-        out = np.zeros(len(preds), dtype=np.float64)
-        exact = np.zeros(len(preds), dtype=bool)
+        out: List[Optional[SelEstimate]] = [None] * len(preds)
         gbm_rows, gbm_idx = [], []
         for i, pred in enumerate(preds):
+            if isinstance(pred, Or):
+                out[i] = self.estimate(pred)
+                continue
             kind, payload = self._route(pred)
             if kind == "exact":
-                out[i] = payload
-                exact[i] = True
+                out[i] = SelEstimate(float(payload), True)
             elif kind == "value":
-                out[i] = payload
+                out[i] = SelEstimate(float(payload), False)
             else:
                 gbm_rows.append(payload)
                 gbm_idx.append(i)
         if gbm_rows:
             z = self.model.predict(np.stack(gbm_rows))
-            out[gbm_idx] = np.clip(1.0 / (1.0 + np.exp(-z)), 0.0, 1.0)
-        return out, exact
+            for i, s in zip(gbm_idx, self._sigmoid(z)):
+                out[i] = SelEstimate(float(s), False)
+        return out
 
-    def estimate_batch(self, preds: Sequence) -> np.ndarray:
-        return self.estimate_batch_ex(preds)[0]
+    # -- deprecated tuple spellings (one release; prefer estimate/_batch) --
+    def estimate_ex(self, pred) -> Tuple[float, bool]:
+        """Deprecated: use :meth:`estimate` (returns :class:`SelEstimate`)."""
+        se = self.estimate(pred)
+        return se.sel, se.is_exact
+
+    def estimate_batch_ex(self, preds: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+        """Deprecated: use :meth:`estimate_batch`."""
+        ses = self.estimate_batch(preds)
+        return (np.asarray([s.sel for s in ses], np.float64),
+                np.asarray([s.is_exact for s in ses], bool))

@@ -38,6 +38,7 @@ __all__ = [
     "compressed_psum",
     "data_axes",
     "merge_topk",
+    "merge_topk_unique",
     "param_sharding",
     "param_spec",
     "psum_with_error_feedback",

@@ -56,7 +56,8 @@ else:  # pragma: no cover - version dependent
 
     jax.shard_map = shard_map
 
-__all__ = ["compressed_psum", "psum_with_error_feedback", "merge_topk", "shard_map"]
+__all__ = ["compressed_psum", "psum_with_error_feedback", "merge_topk",
+           "merge_topk_unique", "shard_map"]
 
 
 def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -131,5 +132,58 @@ def merge_topk(
         order = np.argsort(key, axis=1)[:, :k]
     rows = np.arange(d.shape[0])[:, None]
     out_d, out_i = d[rows, order], i[rows, order]
+    out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)
+    return out_d, out_i
+
+
+_PAD_ID = np.int64(np.iinfo(np.int32).max)   # sorts after every real id
+
+
+def merge_topk_unique(
+    dists: np.ndarray, ids: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge candidate lists into a global top-k with de-duplication.
+
+    Same (n_lists, B, k_i) -> (B, k) contract as :func:`merge_topk`, with two
+    differences that make it the per-disjunct DNF merge:
+
+    * the composite key is ``(distance-bits, global id)`` — equal distances
+      break ties by the *lowest id*, matching ``jax.lax.top_k``'s
+      lowest-index-first rule on a whole-corpus scan, so an exact-tier
+      per-clause union reproduces the whole-predicate scan bit-for-bit;
+    * an id appearing in several lists (a row matching two disjuncts) is
+      kept exactly once, at its best (lowest-key) occurrence — approximate
+      tiers may score the same id differently per clause.
+    """
+    d = np.concatenate(list(dists), axis=1).astype(np.float32)   # (B, sum k_i)
+    i = np.asarray(np.concatenate(list(ids), axis=1))
+    if d.shape[1] < k:
+        b, pad = d.shape[0], k - d.shape[1]
+        d = np.concatenate([d, np.full((b, pad), np.inf, np.float32)], axis=1)
+        i = np.concatenate([i, np.full((b, pad), -1, i.dtype)], axis=1)
+    d = np.where(i < 0, np.inf, d)
+    iid = np.where(i < 0, _PAD_ID, i.astype(np.int64))
+    key = (
+        np.ascontiguousarray(d).view(np.int32).astype(np.int64) << 32
+    ) | iid
+    # de-dup: sort each row by (id, key), mark every non-first occurrence of
+    # an id, and neutralise those slots before the top-k selection
+    order = np.lexsort((key, iid))                       # (B, C) along axis -1
+    rows = np.arange(d.shape[0])[:, None]
+    s_iid = iid[rows, order]
+    dup_sorted = np.zeros_like(s_iid, dtype=bool)
+    dup_sorted[:, 1:] = (s_iid[:, 1:] == s_iid[:, :-1]) & (s_iid[:, 1:] != _PAD_ID)
+    dup = np.zeros_like(dup_sorted)
+    dup[rows, order] = dup_sorted
+    d = np.where(dup, np.inf, d)
+    i = np.where(dup, -1, i)
+    key = np.where(dup, np.iinfo(np.int64).max, key)
+    if d.shape[1] > k:
+        part = np.argpartition(key, k - 1, axis=1)[:, :k]
+        inner = np.argsort(np.take_along_axis(key, part, axis=1), axis=1)
+        sel = np.take_along_axis(part, inner, axis=1)
+    else:
+        sel = np.argsort(key, axis=1)[:, :k]
+    out_d, out_i = d[rows, sel], i[rows, sel]
     out_i = np.where(np.isinf(out_d), -1, out_i).astype(np.int32)
     return out_d, out_i

@@ -76,6 +76,18 @@ def run_ann_trace(args) -> dict:
     qs, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, args.pool,
                                kinds=ds.filter_kinds, sel_range=(0.01, 0.4),
                                seed=args.seed + 2)
+    if args.explain:
+        # print ExecutionPlan trees for sample pool predicates (plus one
+        # synthetic DNF so the per-disjunct shape shows) and exit
+        from ..core import Or
+
+        samples = list(preds[:3])
+        if len(preds) >= 2:
+            samples.append(Or((preds[0], preds[1])))
+        for p in samples:
+            print(f"\n{p}")
+            print(eng.explain(p, k=args.k))
+        return {}
     trace = make_trace(args.trace, qs, list(preds), args.requests, args.rate,
                        k=args.k, seed=args.seed + 3)
 
@@ -154,6 +166,9 @@ def main(argv=None):
     ap.add_argument("--sample-rate", type=float, default=0.1)
     ap.add_argument("--probe-rate", type=float, default=0.0,
                     help="live recall-probe sampling rate (0 disables)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print ExecutionPlan trees for sample pool "
+                         "predicates (incl. a DNF) and exit, no trace replay")
     ap.add_argument("--trace-out", default=None,
                     help="write the span tree as JSONL to this path")
     ap.add_argument("--seed", type=int, default=0)

@@ -29,8 +29,9 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from ..core.engine import FilteredANNEngine, PlannedResult, NO_ROUTE
+from ..core.engine import FilteredANNEngine, PlannedResult, QueryLabel, NO_ROUTE
 from ..core.planner import CorePlanner, roc_auc
+from ..core.predicates import Or
 from .queue import RuntimeRequest
 
 __all__ = ["FeedbackConfig", "LogEntry", "OnlineFeedback"]
@@ -91,36 +92,72 @@ class OnlineFeedback:
         """Paper §3.1 labelling, online — delegates to the engine's shared
         :meth:`FilteredANNEngine.label_query` (the SAME rule the offline
         ``fit`` loop uses, so online and offline labels cannot drift).
-        Returns ``(label, route)``; when the engine carries a backend
-        roster the route is the winning (backend, knob) class index."""
-        ql = self.engine.label_query(req.query, req.pred, req.k)
-        return ql.label, ql.route
+        Returns the full :class:`QueryLabel` — for DNF requests it carries
+        the per-clause races the clause-level log rows are built from."""
+        return self.engine.label_query(req.query, req.pred, req.k)
 
     def observe(self, req: RuntimeRequest, res: PlannedResult) -> bool:
         """Called per served request; returns True when it was sampled into
         the log.  Sampling is seeded — which requests get shadow-labelled
-        is replayable even though the measured labels are not."""
+        is replayable even though the measured labels are not.
+
+        DNF requests log one clause-level row per unique disjunct (clause
+        features, the ClausePlan's decision, the clause's own §3.1 race
+        label/route) — the planner head only ever decides conjunctions, so
+        whole-``Or`` rows would train it on features it never serves."""
         self.n_observed += 1
         if self.rng.random() >= self.config.sample_rate:
             return False
         labelled = self.labeler(req)
-        # pluggable labelers may return a bare int (plan label only) or a
-        # (label, route) pair; the default shadow labeller returns the pair
-        if isinstance(labelled, tuple):
-            label, route = labelled
+        lat = float(res.result.elapsed)
+        if (isinstance(labelled, QueryLabel) and labelled.clauses
+                and isinstance(req.pred, Or)):
+            self._log_clauses(req, res, labelled, lat)
         else:
-            label, route = labelled, NO_ROUTE
-        est, exact = self.engine.estimator.estimate_ex(req.pred)
-        fv = self.engine.feat.vector(req.pred, est, req.k, exact)
-        # the logged latency is what the SERVED strategy paid (its share of
-        # the executed batch), not the shadow race's winner time
-        self.log.append(LogEntry(fv, res.decision, int(label),
-                                 float(res.result.elapsed), route=int(route)))
+            # pluggable labelers may return a bare int (plan label only), a
+            # (label, route) pair, or a QueryLabel
+            if isinstance(labelled, QueryLabel):
+                label, route = labelled.label, labelled.route
+            elif isinstance(labelled, tuple):
+                label, route = labelled
+            else:
+                label, route = labelled, NO_ROUTE
+            se = self.engine.estimator.estimate(req.pred)
+            fv = self.engine.feat.vector(req.pred, se.sel, req.k, se.is_exact)
+            # the logged latency is what the SERVED strategy paid (its share
+            # of the executed batch), not the shadow race's winner time
+            self.log.append(LogEntry(fv, res.decision, int(label), lat,
+                                     route=int(route)))
         if len(self.log) > self.config.max_log:
             self.log = self.log[-self.config.max_log:]
         self.n_sampled += 1
         self._since_refit += 1
         return True
+
+    def _log_clauses(self, req: RuntimeRequest, res: PlannedResult,
+                     ql: QueryLabel, lat: float) -> None:
+        """One log row per unique disjunct of a DNF request.  Clause plans
+        are matched by canonical key (term order varies across logically
+        equal predicates); the row's latency is the whole request's share —
+        clause-level timing is not observable from a merged result."""
+        plan = getattr(res, "plan", None)
+        by_key = ({c.clause_key: c for c in plan.clauses}
+                  if plan is not None else {})
+        se = self.engine.estimator.estimate(req.pred)
+        seen: set = set()
+        ci = 0
+        for t, ce in zip(req.pred.terms, se.per_clause):
+            key = self.engine._plan_key(t)
+            if key in seen:
+                continue
+            seen.add(key)
+            cl = ql.clauses[ci]
+            ci += 1
+            cp = by_key.get(key)
+            dec = cp.decision if cp is not None else res.decision
+            fv = self.engine.feat.vector(t, ce.sel, req.k, ce.is_exact)
+            self.log.append(LogEntry(fv, int(dec), int(cl.label), lat,
+                                     route=int(cl.route)))
 
     # ------------------------------------------------------------------
     def maybe_refit(self) -> bool:

@@ -69,7 +69,7 @@ class Telemetry:
         self._inc("repro_batches_total", 0)
         self._inc("repro_deadline_flush_total", 0)
         self._inc("repro_compactions_total", 0)
-        for n in STRATEGY_NAMES.values():
+        for n in (*STRATEGY_NAMES.values(), "dnf"):
             self._inc("repro_plan_total", 0, plan=n)
         for op in ("upsert", "delete"):
             self._inc("repro_writes_total", 0, op=op)
@@ -109,10 +109,15 @@ class Telemetry:
             self._inc("repro_deadline_flush_total")
         for req, res in zip(reqs, results):
             self._inc("repro_requests_total")
-            self._inc("repro_plan_total", plan=STRATEGY_NAMES[res.decision])
+            # plan-mix: per-disjunct DNF plans count under their own "dnf"
+            # dimension, not the dominant clause's strategy
+            plan = getattr(res, "plan", None)
+            plan_name = (plan.strategy if plan is not None
+                         else STRATEGY_NAMES[res.decision])
+            self._inc("repro_plan_total", plan=plan_name)
             # backend-mix: routed (backend:knob) execution counts — strategy
             # name stands in for rows executed before routing existed
-            bk = getattr(res.result, "backend", "") or STRATEGY_NAMES[res.decision]
+            bk = getattr(res.result, "backend", "") or plan_name
             knob = getattr(res.result, "knob", "")
             self._inc("repro_route_total",
                       route=f"{bk}:{knob}" if knob else bk)
@@ -149,7 +154,7 @@ class Telemetry:
     @property
     def plan_counts(self) -> Dict[str, int]:
         m = self._label_map("repro_plan_total", "plan")
-        return {n: m.get(n, 0) for n in STRATEGY_NAMES.values()}
+        return {n: m.get(n, 0) for n in (*STRATEGY_NAMES.values(), "dnf")}
 
     @property
     def backend_counts(self) -> Dict[str, int]:

@@ -27,7 +27,6 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.engine import FilteredANNEngine, PlannedResult, package_results
 from ..core.executors import SearchResult
-from ..core.planner import POST_FILTER
 from ..core.predicates import AnyPredicate
 from ..dist.collectives import merge_topk
 from ..models.model import Model
@@ -286,7 +285,12 @@ class ShardedANNEngine:
     def query(self, q: np.ndarray, pred: AnyPredicate, k: int = 10) -> PlannedResult:
         q = np.atleast_2d(q)
         tr = self.tracer
-        est, decision, route, plan_overhead = self.engine.plan_ex(pred, k)
+        plan, plan_overhead = self.engine.make_plan(pred, k)
+        if plan.is_dnf:
+            # per-disjunct: fan the expanded clause rows out as a batch —
+            # the generic path already does exactly this for B == 1
+            return self._fanout(q, [pred], k, [plan], plan_overhead)[0]
+        est, decision, route = plan.est, plan.decision, plan.route
         t0 = time.perf_counter()
         with tr.span("shard_fanout", n_shards=len(self.shards), n_queries=1):
             per_shard = [s.search(q, pred, k, decision, est, route=route)
@@ -304,30 +308,47 @@ class ShardedANNEngine:
             backend=per_shard[0].backend, knob=per_shard[0].knob,
         )
         if not res.backend:
-            from ..core.engine import _default_route_name
-            res.backend, res.knob = _default_route_name(decision)
-        return PlannedResult(res, est, decision, plan_overhead)
+            res.backend, res.knob = plan.backend, plan.knob
+        return PlannedResult(res, plan, plan_overhead)
+
+    def explain(self, pred: AnyPredicate, k: int = 10) -> str:
+        """Pretty-print the central planner's :class:`ExecutionPlan` for
+        ``(pred, k)`` without executing (plans are shard-independent)."""
+        return self.engine.explain(pred, k)
 
     def batch_query(self, queries: np.ndarray, preds: Sequence[AnyPredicate],
                     k: int = 10) -> List[PlannedResult]:
         """Batched sharded path: plan the whole batch ONCE, fan the batch —
         not single queries — out to every shard (each shard runs its
         decision-grouped executors over all B rows), then merge all shards'
-        (B, k) results with one batched ``merge_topk``.  Ids are identical to
-        B independent :meth:`query` calls; per-result ``elapsed`` is the
-        fan-out+merge wall time split evenly across rows."""
+        (B, k) results with one batched ``merge_topk``.  DNF rows expand to
+        one fan-out row per clause and collapse after the shard merge with
+        cross-clause de-duplication.  Ids are identical to B independent
+        :meth:`query` calls; per-result ``elapsed`` is the fan-out+merge
+        wall time split evenly across rows."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
+        plans, plan_overhead = self.engine.make_plan_batch(preds, k)
+        return self._fanout(queries, preds, k, plans, plan_overhead)
+
+    def _fanout(self, queries: np.ndarray, preds: Sequence[AnyPredicate],
+                k: int, plans, plan_overhead: float) -> List[PlannedResult]:
+        from ..core.plan import collapse_clause_results, expand_for_execution
+
         b = len(preds)
-        ests, decisions, routes, plan_overhead = self.engine.plan_batch_ex(preds, k)
         plan_share = plan_overhead / max(b, 1)
+        exp_rows, exp_preds, decisions, ests, routes, row_map = (
+            expand_for_execution(preds, plans))
+        identity = len(exp_preds) == b and all(len(m) == 1 for m in row_map)
+        xq = queries if identity else queries[exp_rows]
         tr = self.tracer
         t0 = time.perf_counter()
         per_shard = []
-        with tr.span("shard_fanout", n_shards=len(self.shards), n_queries=b):
+        with tr.span("shard_fanout", n_shards=len(self.shards),
+                     n_queries=len(exp_preds)):
             for si, s in enumerate(self.shards):
                 with tr.span("shard", shard=si):
                     per_shard.append(
-                        s.search_batch(queries, preds, k, decisions, ests,
+                        s.search_batch(xq, exp_preds, k, decisions, ests,
                                        routes=routes, tracer=tr))
         with tr.span("merge", n_shards=len(self.shards), k=int(k)):
             d, i = merge_topk(
@@ -336,17 +357,10 @@ class ShardedANNEngine:
                 k,
             )
             rounds = np.max(np.stack([r[2] for r in per_shard]), axis=0)
+            if not identity:
+                d, i, rounds = collapse_clause_results(d, i, rounds, row_map, k)
         share = (time.perf_counter() - t0) / max(b, 1) + plan_share
-        route_names = None
-        if self.shards and self.shards[0].backend_set is not None:
-            classes = self.shards[0].backend_set.classes()
-            route_names = [
-                classes[int(routes[j])]
-                if routes[j] >= 0 and decisions[j] == POST_FILTER else None
-                for j in range(b)
-            ]
-        return package_results(d, i, rounds, ests, decisions, share, plan_share,
-                               route_names=route_names)
+        return package_results(d, i, rounds, plans, share, plan_share)
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

@@ -230,6 +230,52 @@ def test_sharded_merge_identity(corpus, name):
 
 
 # ----------------------------------------------------------------------
+# 5b. per-disjunct DNF union == whole-predicate union-mask search
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", DEFAULT_BACKENDS)
+def test_dnf_union_merge_identity(built, corpus, name):
+    """Per-clause masked top-k merged with ``merge_topk_unique`` (the
+    ExecutionPlan ``merge="union"`` collapse) vs one search over the OR of
+    the clause masks.  The clause masks overlap, so the dedup path is
+    genuinely exercised.  Exact tiers (floor >= 0.99) must be bit-identical
+    — composite (dist, global-id) keys make the union reproduce the
+    whole-predicate scan's tie-breaks; approximate tiers keep their floor
+    against the union-mask oracle."""
+    from repro.dist.collectives import merge_topk_unique
+
+    x, q, _ = corpus
+    rng = np.random.default_rng(21)
+    clause_masks = [rng.random(len(x)) < 0.25 for _ in range(3)]
+    union = clause_masks[0] | clause_masks[1] | clause_masks[2]
+    overlap = (clause_masks[0] & clause_masks[1]).sum()
+    assert overlap > 0, "degenerate fixture: clauses must overlap"
+    b = built[name]
+    _, truth = _oracle(x, q, union)
+    for tier in b.knob_grid():
+        wd, wi = b.search_masked(q, union, K, knobs=tier.knobs)
+        per = [b.search_masked(q, cm, K, knobs=tier.knobs)
+               for cm in clause_masks]
+        md, mi = merge_topk_unique(
+            np.stack([d for d, _ in per]), np.stack([i for _, i in per]), K
+        )
+        for row in mi:                      # dedup contract at every tier
+            valid = row[row >= 0]
+            assert len(set(valid.tolist())) == len(valid), (
+                f"{name}:{tier.name} union merge returned a duplicate id"
+            )
+            assert union[valid].all()
+        if tier.recall_floor >= 0.99:
+            np.testing.assert_array_equal(mi, wi, err_msg=f"{name}:{tier.name}")
+            np.testing.assert_allclose(md, wd, rtol=1e-5, atol=1e-5)
+        else:
+            r = _recall(mi, truth)
+            assert r >= tier.recall_floor, (
+                f"dnf-union {name}:{tier.name} recall {r:.3f} "
+                f"< {tier.recall_floor}"
+            )
+
+
+# ----------------------------------------------------------------------
 # registry mechanics + a custom backend passing the same gauntlet
 # ----------------------------------------------------------------------
 class _ToyExactBackend:

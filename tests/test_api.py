@@ -1,0 +1,123 @@
+"""API-surface snapshot for the planning stack.
+
+A CI tripwire, not a behaviour test: the public surface of
+``core.planner``, ``core.selectivity``, and ``core.plan`` — plus the
+``PlannedResult``/``QueryResult`` result envelope — is frozen here as
+literal signatures.  Renaming a method, reordering dataclass fields, or
+changing a default silently breaks downstream callers (the plan cache
+pickles ``ExecutionPlan`` field order; the feedback log matches clause
+plans by field); this test makes such a change an explicit, reviewed
+diff instead of a surprise.
+
+When an INTENTIONAL API change lands, update the snapshot in the same
+commit and call the change out in the PR.
+"""
+import dataclasses
+import inspect
+
+from repro.core import engine, plan, planner, selectivity
+
+
+def _sig(obj) -> str:
+    return str(inspect.signature(obj))
+
+
+def _fields(cls) -> list:
+    return [f.name for f in dataclasses.fields(cls)]
+
+
+def _methods(cls) -> dict:
+    out = {}
+    for name, m in sorted(vars(cls).items()):
+        if name.startswith("_"):
+            continue
+        if inspect.isfunction(m):
+            out[name] = _sig(m)
+        elif isinstance(m, property):
+            out[name] = "<property>"
+    return out
+
+
+# ----------------------------------------------------------------------
+# core.planner
+# ----------------------------------------------------------------------
+def test_planner_surface():
+    assert planner.PRE_FILTER == 0
+    assert planner.POST_FILTER == 1
+    assert planner.INDEXED_PRE == 2
+    assert _sig(planner.CorePlanner.__init__) == \
+        "(self, n_features: 'int' = 10, seed: 'int' = 0)"
+    m = _methods(planner.CorePlanner)
+    assert m["decide"] == "(self, features: 'np.ndarray') -> 'np.ndarray'"
+    assert m["predict_proba"] == "(self, features: 'np.ndarray') -> 'np.ndarray'"
+    assert m["fit"] == ("(self, features: 'np.ndarray', labels: 'np.ndarray', "
+                        "l2_grid: 'Sequence[float]' = (0.0001, 0.001), "
+                        "n_folds: 'int' = 2) -> \"'CorePlanner'\"")
+    assert m["route"] == "(self, features: 'np.ndarray') -> 'Optional[np.ndarray]'"
+    assert {"fit_routing", "state_dict", "load_state", "route_classes"} <= set(m)
+    assert _fields(planner.PlannerFeatures) == ["stats"]
+    assert _methods(planner.PlannerFeatures)["vector"] == (
+        "(self, pred: 'Predicate', est_sel: 'float', k: 'int', "
+        "sel_exact: 'bool' = False) -> 'np.ndarray'"
+    )
+
+
+# ----------------------------------------------------------------------
+# core.selectivity — the SelEstimate API is the one estimator surface
+# ----------------------------------------------------------------------
+def test_selectivity_surface():
+    assert _fields(selectivity.SelEstimate) == ["sel", "is_exact", "per_clause"]
+    m = _methods(selectivity.SelectivityEstimator)
+    assert m["estimate"] == "(self, pred) -> 'SelEstimate'"
+    assert m["estimate_batch"] == \
+        "(self, preds: 'Sequence') -> 'List[SelEstimate]'"
+    # deprecated aliases stay until the next major cleanup — removing them
+    # is an API change this snapshot forces into review
+    assert m["estimate_ex"] == "(self, pred) -> 'Tuple[float, bool]'"
+    assert m["estimate_batch_ex"] == \
+        "(self, preds: 'Sequence') -> 'Tuple[np.ndarray, np.ndarray]'"
+    assert m["fit"] == ("(self, preds: 'Sequence[Predicate]', "
+                        "true_sel: 'Sequence[float]') -> "
+                        "\"'SelectivityEstimator'\"")
+    assert selectivity.__all__ == ["SelEstimate", "SelectivityEstimator",
+                                   "N_FEATURES"]
+
+
+# ----------------------------------------------------------------------
+# core.plan — the ExecutionPlan tree
+# ----------------------------------------------------------------------
+def test_plan_surface():
+    assert plan.NO_ROUTE == -1
+    assert plan.STRATEGY_NAMES == {0: "pre", 1: "post", 2: "ipre"}
+    # field ORDER is load-bearing: clause plans are constructed positionally
+    assert _fields(plan.ClausePlan) == [
+        "clause_key", "decision", "backend", "knob", "est", "route", "sel_exact",
+    ]
+    assert _fields(plan.ExecutionPlan) == ["clauses", "est", "sel_exact", "merge"]
+    props = _methods(plan.ExecutionPlan)
+    assert {"decision", "backend", "knob", "route", "strategy",
+            "is_dnf", "n_clauses"} <= set(props)
+    assert all(props[p] == "<property>" for p in
+               ("decision", "backend", "knob", "route", "strategy"))
+    assert _sig(plan.expand_for_execution) == \
+        "(preds: 'Sequence', plans: 'Sequence[ExecutionPlan]')"
+    assert _sig(plan.collapse_clause_results) == (
+        "(d: 'np.ndarray', ids: 'np.ndarray', rounds: 'np.ndarray', "
+        "row_map: 'List[List[int]]', k: 'int')"
+    )
+    assert _sig(plan.format_plan) == "(plan: 'ExecutionPlan', pred=None) -> 'str'"
+    assert _sig(plan.default_route_name) == "(decision: 'int') -> 'Tuple[str, str]'"
+
+
+# ----------------------------------------------------------------------
+# result envelope
+# ----------------------------------------------------------------------
+def test_query_result_surface():
+    assert engine.QueryResult is engine.PlannedResult
+    assert _fields(engine.PlannedResult) == ["result", "plan", "plan_overhead"]
+    props = _methods(engine.PlannedResult)
+    assert props["decision"] == "<property>"
+    assert props["est_selectivity"] == "<property>"
+    # the legacy tuple protocol must NOT come back
+    assert "__iter__" not in vars(engine.PlannedResult)
+    assert "__iter__" not in vars(engine.QueryLabel)

@@ -34,7 +34,7 @@ def test_single_label_selectivity_exact(tiny):
     for code in range(3):
         p = Predicate(labels=(LabelEq(0, code),))
         true = p.selectivity(ds.cat, ds.num)
-        est = SelectivityEstimator(stats).estimate(p)
+        est = SelectivityEstimator(stats).estimate(p).sel
         assert abs(est - true) < 1e-9, "single-label lookup must be exact"
 
 
@@ -42,7 +42,7 @@ def test_pair_label_selectivity_exact(tiny):
     ds, stats = tiny
     p = Predicate(labels=(LabelEq(0, 0), LabelEq(1, 0)))
     true = p.selectivity(ds.cat, ds.num)
-    est = SelectivityEstimator(stats).estimate(p)
+    est = SelectivityEstimator(stats).estimate(p).sel
     assert abs(est - true) < 1e-9, "two-label co-occurrence lookup must be exact"
 
 
@@ -52,7 +52,7 @@ def test_histogram_range_selectivity(tiny):
     lo, hi = float(np.quantile(x, 0.3)), float(np.quantile(x, 0.5))
     p = Predicate(ranges=(RangePred(0, ((lo, hi),)),))
     true = p.selectivity(ds.cat, ds.num)
-    est = SelectivityEstimator(stats).estimate(p)
+    est = SelectivityEstimator(stats).estimate(p).sel
     assert abs(est - true) < 0.02, f"hist est {est} vs true {true}"
 
 
@@ -70,7 +70,7 @@ def test_multi_range_union(tiny):
     q = np.quantile(x, [0.1, 0.2, 0.6, 0.7])
     p = Predicate(ranges=(RangePred(0, ((float(q[0]), float(q[1])), (float(q[2]), float(q[3])))),))
     true = p.selectivity(ds.cat, ds.num)
-    est = SelectivityEstimator(stats).estimate(p)
+    est = SelectivityEstimator(stats).estimate(p).sel
     assert abs(est - true) < 0.03
 
 
@@ -90,7 +90,7 @@ def test_mixed_estimator_with_gbm(tiny):
         ds.vectors, ds.cat, ds.num, 120, kinds=("mixed", "label"), seed=3
     )
     est = SelectivityEstimator(stats).fit(preds[:100], sels[:100])
-    errs = [abs(est.estimate(p) - s) for p, s in zip(preds[100:], sels[100:])]
+    errs = [abs(est.estimate(p).sel - s) for p, s in zip(preds[100:], sels[100:])]
     assert float(np.mean(errs)) < 0.08, f"mean abs err {np.mean(errs)}"
 
 

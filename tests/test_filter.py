@@ -310,9 +310,9 @@ def test_indexed_pre_identical_to_scan_pre_sharded(engine):
 def test_estimator_exact_path(engine):
     ds, eng = engine
     for p in _predicate_pool(ds, n=10):
-        est, exact = eng.estimator.estimate_ex(p)
-        assert exact
-        assert est == pytest.approx(p.selectivity(ds.cat, ds.num), abs=0)
+        se = eng.estimator.estimate(p)
+        assert se.is_exact
+        assert se.sel == pytest.approx(p.selectivity(ds.cat, ds.num), abs=0)
 
 
 def test_engine_three_way_plan_and_dnf_end_to_end(engine):
@@ -353,8 +353,8 @@ def test_estimator_fit_tolerates_dnf_and_wild_codes(engine):
     eng.estimator.fit(pool, list(sels) + [0.1])           # Or entry skipped
     wild = Predicate(nots=(Not(LabelEq(0, 9999)),))       # valid query: all-true
     assert eng.dataset_stats.independence_sel(wild) == 1.0        # was IndexError
-    est, exact = eng.estimator.estimate_ex(wild)
-    assert exact and est == pytest.approx(wild.selectivity(ds.cat, ds.num), abs=0)
+    se = eng.estimator.estimate(wild)
+    assert se.is_exact and se.sel == pytest.approx(wild.selectivity(ds.cat, ds.num), abs=0)
 
 
 def test_engine_stats_exposes_cache_counters(engine):
@@ -392,8 +392,8 @@ def test_engine_without_attr_index_stays_two_way():
     assert eng.attr_index is None
     _, preds, _ = gen_queries(ds.vectors, ds.cat, ds.num, 6, kinds=("range",), seed=3)
     for p in preds:
-        est, exact = eng.estimator.estimate_ex(p)
-        assert not exact
+        se = eng.estimator.estimate(p)
+        assert not se.is_exact
         r = eng.query(ds.vectors[0], p, k=5)
         assert r.decision in (PRE_FILTER, POST_FILTER)
 

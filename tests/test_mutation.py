@@ -143,23 +143,20 @@ def test_sel_is_exact_demotes_and_recovers(corpus):
     v, cat, num = corpus
     eng = _build(v, cat, num)
     assert eng.attr_index.covers(PRED_RANGE)
-    _, exact0 = eng.estimator.estimate_ex(PRED_RANGE)
-    assert exact0
+    assert eng.estimator.estimate(PRED_RANGE).is_exact
     _mutate(eng, v, cat)
     # stale range index: fail closed out of the covered set
     assert not eng.attr_index.covers(PRED_RANGE)
-    _, exact1 = eng.estimator.estimate_ex(PRED_RANGE)
-    assert not exact1
+    assert not eng.estimator.estimate(PRED_RANGE).is_exact
     # label bitmaps extended in place: still exact, and exact over LIVE rows
-    s, exact2 = eng.estimator.estimate_ex(PRED_LABEL)
-    assert exact2
+    se = eng.estimator.estimate(PRED_LABEL)
+    assert se.is_exact
     alive = eng.live.alive_mask()
     m = np.concatenate([cat[:, 0] == 1, eng.live.seg_cat()[:, 0] == 1]) & alive
-    assert s == pytest.approx(m.sum() / alive.sum())
+    assert se.sel == pytest.approx(m.sum() / alive.sum())
     eng.compact()
     assert eng.attr_index.covers(PRED_RANGE)
-    _, exact3 = eng.estimator.estimate_ex(PRED_RANGE)
-    assert exact3
+    assert eng.estimator.estimate(PRED_RANGE).is_exact
 
 
 def test_stale_range_boundary_regression(corpus):

@@ -160,7 +160,7 @@ def test_telemetry_legacy_view_reads_registry(system):
     assert c["n_completed"] == 60 == tel.n_completed
     assert c["n_completed"] == tel.registry.value("repro_requests_total")
     assert sum(c["plan_counts"].values()) == 60
-    assert set(c["plan_counts"]) == {"pre", "post", "ipre"}   # pre-created
+    assert set(c["plan_counts"]) == {"pre", "post", "ipre", "dnf"}   # pre-created
     assert sum(c["batch_sizes"].values()) == c["n_batches"]
     met = {lbl["tier"]: v for lbl, v in
            tel.registry.series("repro_deadline_total", match={"outcome": "met"})}

@@ -73,7 +73,7 @@ def test_estimates_in_unit_interval(seed):
         Predicate(labels=(LabelEq(0, 0),), ranges=(RangePred(1, ((0.0, 2.0),)),)),
     ]
     for p in preds:
-        s = est.estimate(p)
+        s = est.estimate(p).sel
         assert 0.0 <= s <= 1.0
 
 

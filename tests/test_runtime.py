@@ -277,7 +277,8 @@ def test_plan_cache_purity_and_invalidation(system):
     assert len(eng.plan_cache) >= 1
     eng.estimator.fit(list(ps), list(sels))
     est2, dec2, _ = eng.plan(p, K)
-    assert (est2, dec2) == eng._plan_cold(p, K)[:2]   # fresh, not the stale memo
+    cold = eng._plan_cold(p, K)
+    assert (est2, dec2) == (cold.est, cold.decision)   # fresh, not the stale memo
 
 
 def test_engine_stats_accessor_dnf(system):
@@ -304,7 +305,7 @@ def test_engine_stats_accessor_dnf(system):
 def _threshold_labeler(eng, cut=0.08):
     """Deterministic oracle: post-filter wins above the selectivity cut."""
     def labeler(req):
-        est, _ = eng.estimator.estimate_ex(req.pred)
+        est = eng.estimator.estimate(req.pred).sel
         return POST_FILTER if est >= cut else PRE_FILTER
     return labeler
 
@@ -321,9 +322,9 @@ def test_feedback_recovers_warped_planner(system):
     # warp: train on the INVERTED oracle
     feats, bad = [], []
     for p in preds:
-        est, exact = eng.estimator.estimate_ex(p)
-        feats.append(eng.feat.vector(p, est, K, exact))
-        bad.append(PRE_FILTER if est >= 0.08 else POST_FILTER)
+        se = eng.estimator.estimate(p)
+        feats.append(eng.feat.vector(p, se.sel, K, se.is_exact))
+        bad.append(PRE_FILTER if se.sel >= 0.08 else POST_FILTER)
     eng.swap_planner(CorePlanner(seed=3).fit(np.stack(feats), np.asarray(bad)))
 
     def acc():

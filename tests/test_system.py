@@ -93,5 +93,5 @@ def test_estimates_track_truth(system):
     qs, preds, sels = gen_queries(
         ds.vectors, ds.cat, ds.num, 20, kinds=ds.filter_kinds, seed=17
     )
-    errs = [abs(eng.estimator.estimate(p) - s) for p, s in zip(preds, sels)]
+    errs = [abs(eng.estimator.estimate(p).sel - s) for p, s in zip(preds, sels)]
     assert float(np.mean(errs)) < 0.05
